@@ -1,0 +1,46 @@
+"""Paper Fig 7: theoretical resource efficiency (1M tasks) at three scales
+(100 / 1K / 10K processors) for dispatch throughputs from 1 to 1M tasks/s.
+
+Closed form: with dispatch throughput r and P processors, tasks of length t:
+processors stay busy iff r*t >= P; efficiency E = min(1, r*t/P) (saturation
+model), matching the paper's observation that 90% efficiency needs
+t >= 0.9*P/r.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save_json
+
+THROUGHPUTS = [1, 10, 100, 500, 1_000, 10_000, 100_000, 1_000_000]
+SCALES = [100, 1_000, 10_000]
+TASK_LENGTHS = [0.2, 1.9, 20.0, 100.0, 900.0, 10_000.0]
+
+
+def efficiency(r: float, P: int, t: float) -> float:
+    return min(1.0, r * t / P) if t > 0 else 0.0
+
+
+def min_task_len_for(target: float, r: float, P: int) -> float:
+    return target * P / r
+
+
+def run() -> list[dict]:
+    table = {}
+    for P in SCALES:
+        table[P] = {r: {t: round(efficiency(r, P, t), 4)
+                        for t in TASK_LENGTHS} for r in THROUGHPUTS}
+    # paper's spot checks: at 500 t/s, 90% efficiency needs 0.2 s / 1.9 s /
+    # 20 s tasks at 100 / 1K / 10K processors (vs 100/900/10K s at 1 t/s)
+    checks = {
+        "needed@1tps": {P: min_task_len_for(0.9, 1, P) for P in SCALES},
+        "needed@500tps": {P: round(min_task_len_for(0.9, 500, P), 2)
+                          for P in SCALES},
+    }
+    save_json("resource_efficiency_fig7", {"table": table, "checks": checks})
+    rows = [{
+        "name": "resource_efficiency.fig7",
+        "us_per_call": 0.0,
+        "derived": (f"90% eff task lengths @500t/s: "
+                    f"{checks['needed@500tps']} (paper: 0.2/1.9/20 s); "
+                    f"@1t/s: {checks['needed@1tps']} (paper: 100/900/10k s)"),
+    }]
+    return rows

@@ -1,0 +1,65 @@
+"""§Roofline: three-term roofline table from the dry-run artifacts.
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun) and
+emits the per-(arch x shape x mesh) table: compute/memory/collective terms in
+seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS useful ratio, and the
+roofline-bound MFU.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, save_json
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_cells(mesh: str | None = "16x16") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh is None or rec.get("mesh") == mesh:
+            cells.append(rec)
+    return cells
+
+
+def table(mesh="16x16") -> list[dict]:
+    rows = []
+    for rec in load_cells(mesh):
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "kind": rec["kind"],
+            "compute_s": r["compute_term_s"],
+            "memory_s": r["memory_term_s"],
+            "collective_s": r["collective_term_s"],
+            "dominant": r["dominant"],
+            "useful_ratio": r.get("useful_flops_ratio"),
+            "mfu_bound": r.get("mfu_bound"),
+            "hbm_gb_per_dev": (rec["memory"]["argument_bytes"] or 0) / 2**30,
+        })
+    return rows
+
+
+def run() -> list[dict]:
+    rows = table("16x16")
+    save_json("roofline_table", rows)
+    if not rows:
+        return [{"name": "roofline.table", "us_per_call": 0.0,
+                 "derived": "no dry-run artifacts found — run "
+                            "python -m repro.launch.dryrun --all first"}]
+    n_dom = {}
+    for r in rows:
+        n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+    worst = min((r for r in rows if r["mfu_bound"]),
+                key=lambda r: r["mfu_bound"])
+    return [{
+        "name": "roofline.table",
+        "us_per_call": 0.0,
+        "derived": (f"{len(rows)} cells; dominant: {n_dom}; worst "
+                    f"mfu_bound={worst['mfu_bound']:.3f} "
+                    f"({worst['arch']}/{worst['shape']})"),
+    }]

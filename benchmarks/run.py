@@ -1,0 +1,54 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
+for the paper claim it reproduces).  Detailed JSON lands in
+benchmarks/results/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.microbench",           # §4: 487 t/s, 54k executors, queue
+    "benchmarks.efficiency",           # Fig 6
+    "benchmarks.resource_efficiency",  # Fig 7
+    "benchmarks.io_throughput",        # Fig 8
+    "benchmarks.scalability",          # Fig 9
+    "benchmarks.pipelining",           # Fig 10
+    "benchmarks.load_balance",         # Fig 11
+    "benchmarks.throughput",           # Fig 12
+    "benchmarks.app_fmri",             # Fig 13
+    "benchmarks.app_montage",          # Fig 14
+    "benchmarks.app_moldyn",           # Fig 17/18
+    "benchmarks.code_size",            # Table 1
+    "benchmarks.vmap_clustering",      # TPU adaptation of clustering
+    "benchmarks.roofline",             # §Roofline (from dry-run artifacts)
+]
+
+
+def main() -> int:
+    import importlib
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for modname in MODULES:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run()
+            for r in rows:
+                derived = str(r["derived"]).replace(",", ";")
+                print(f"{r['name']},{r['us_per_call']:.3f},{derived}",
+                      flush=True)
+        except Exception:
+            failed += 1
+            print(f"{modname},nan,FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        sys.stderr.write(f"# {modname}: {time.time() - t0:.1f}s\n")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

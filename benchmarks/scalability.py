@@ -1,0 +1,44 @@
+"""Paper Fig 9: engine scalability — tasks representable per unit memory.
+
+Paper: Karajan ~800 B/lightweight-thread (40k threads in 32 MB); Swift
+~3.2 KB/node (4k nodes in 32 MB, 160k in 1 GB).  We measure the real
+per-task + per-future footprint of our engine with tracemalloc.
+"""
+from __future__ import annotations
+
+import tracemalloc
+
+from repro.core import Engine, SimClock
+
+
+def bytes_per_task(n: int = 50_000) -> float:
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site(concurrency=1)
+    gate = eng.submit("gate", None, duration=1e12)  # never resolves in test
+    tracemalloc.start()
+    before, _ = tracemalloc.get_traced_memory()
+    outs = [eng.submit(f"t{i}", None, args=[gate], duration=1.0)
+            for i in range(n)]
+    after, _ = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert len(outs) == n
+    return (after - before) / n
+
+
+def run() -> list[dict]:
+    bpt = bytes_per_task()
+    per_32mb = int(32 * 2 ** 20 / bpt)
+    per_1gb = int(2 ** 30 / bpt)
+    rows = [{
+        "name": "scalability.fig9",
+        "us_per_call": 0.0,
+        "derived": (f"{bpt:.0f} B/task -> {per_32mb} tasks/32MB, "
+                    f"{per_1gb} tasks/1GB (paper: Swift 3.2KB/node -> "
+                    f"4k/32MB, 160k/1GB; Karajan 800B/thread)"),
+    }]
+    from benchmarks.common import save_json
+    save_json("scalability_fig9", {"bytes_per_task": bpt,
+                                   "tasks_per_32MB": per_32mb,
+                                   "tasks_per_1GB": per_1gb})
+    return rows

@@ -1,0 +1,85 @@
+"""Paper Fig 12: end-to-end sleep(0) throughput.
+
+Paper: Falkon-direct 120 t/s (older code; 487 with current), Swift+Falkon
+56 t/s (LAN), GRAM+PBS ~2 t/s -> 23x improvement via Falkon.
+We measure (a) our engine's REAL in-process dispatch rate through the full
+Swift path (site selection + provenance + futures), (b) direct Falkon-service
+dispatch, and (c) the simulated GRAM+PBS rate.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Engine, RealClock, SimClock
+from repro.core.falkon import FalkonConfig, DRPConfig, FalkonService
+from benchmarks.common import PAPER, batch_engine, save_json
+
+N = 20_000
+
+
+def swift_path_throughput() -> float:
+    eng = Engine(RealClock())
+    eng.local_site(concurrency=64)
+    t0 = time.monotonic()
+    outs = [eng.submit(f"t{i}", None) for i in range(N)]
+    eng.run()
+    dt = time.monotonic() - t0
+    assert all(o.resolved for o in outs)
+    return N / dt
+
+
+def falkon_direct_throughput() -> float:
+    """Bypass the engine: submit straight to the service (paper's
+    'Falkon client -> Falkon service' measurement)."""
+    clock = RealClock()
+    svc = FalkonService(clock, FalkonConfig(
+        dispatch_overhead=0.0,
+        drp=DRPConfig(max_executors=64, alloc_latency=0.0)))
+    svc.provision(64)
+    clock.run()  # let provisioning land
+    done = [0]
+
+    class _T:
+        __slots__ = ("fn", "args", "duration", "sim_value", "submit_time",
+                     "start_time", "host", "_falkon_done", "fault_check")
+
+        def __init__(self):
+            self.fn = None
+            self.args = []
+            self.duration = 0.0
+            self.sim_value = None
+            self.fault_check = None
+
+    t0 = time.monotonic()
+    for _ in range(N):
+        svc.submit(_T(), lambda ok, v, e: done.__setitem__(0, done[0] + 1))
+    clock.run()
+    dt = time.monotonic() - t0
+    assert done[0] == N
+    return N / dt
+
+
+def gram_pbs_throughput_sim() -> float:
+    eng = batch_engine(nodes=64, submit_rate=PAPER["gram_pbs_throughput"],
+                       sched_latency=0.0)
+    outs = [eng.submit(f"t{i}", None, duration=0.0) for i in range(2000)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    return 2000 / eng.clock.now()
+
+
+def run() -> list[dict]:
+    t_swift = swift_path_throughput()
+    t_direct = falkon_direct_throughput()
+    t_pbs = gram_pbs_throughput_sim()
+    save_json("throughput_fig12", {
+        "swift_falkon_tps": t_swift, "falkon_direct_tps": t_direct,
+        "gram_pbs_tps": t_pbs, "improvement": t_swift / t_pbs})
+    return [{
+        "name": "throughput.fig12",
+        "us_per_call": 1e6 / t_swift,
+        "derived": (f"swift+falkon={t_swift:.0f} t/s, "
+                    f"falkon-direct={t_direct:.0f} t/s, gram+pbs={t_pbs:.1f} "
+                    f"t/s -> {t_swift / t_pbs:.0f}x (paper: 56 vs 2 = 23x; "
+                    f"direct > engine as in paper)"),
+    }]

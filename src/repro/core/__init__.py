@@ -1,0 +1,33 @@
+"""Core paper technique: Swift (workflow DSL + XDTM) / Karajan (futures
+engine) / Falkon (multi-level scheduling) adapted to JAX/TPU.
+
+Public API:
+    Engine, Workflow, Dataset, mappers, FalkonService, providers,
+    RestartLog, FaultInjector, SimClock/RealClock.
+"""
+from repro.core.engine import (BatchSchedulerProvider, ClusteringProvider,
+                               Engine, FalkonProvider, LocalProvider, Task)
+from repro.core.falkon import DRPConfig, FalkonConfig, FalkonService
+from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
+from repro.core.futures import DataFuture, resolved, when_all
+from repro.core.provenance import VDC, InvocationRecord
+from repro.core.restart_log import RestartLog
+from repro.core.simclock import RealClock, SimClock
+from repro.core.sites import LoadBalancer, Site
+from repro.core.workflow import Procedure, Workflow
+from repro.core.xdtm import (ArrayOf, CSVMapper, Dataset, FILE,
+                             FileSystemMapper, FLOAT, INT, ListMapper,
+                             Mapper, PhysicalRef, Primitive, ShardMapper,
+                             STRING, Struct)
+
+__all__ = [
+    "Engine", "Workflow", "Procedure", "Task",
+    "LocalProvider", "BatchSchedulerProvider", "FalkonProvider",
+    "ClusteringProvider", "FalkonService", "FalkonConfig", "DRPConfig",
+    "DataFuture", "resolved", "when_all", "SimClock", "RealClock",
+    "RestartLog", "FaultInjector", "RetryPolicy", "TaskFailure",
+    "VDC", "InvocationRecord", "LoadBalancer", "Site",
+    "Dataset", "Mapper", "ListMapper", "FileSystemMapper", "CSVMapper",
+    "ShardMapper", "PhysicalRef", "Struct", "ArrayOf", "Primitive",
+    "INT", "FLOAT", "STRING", "FILE",
+]

@@ -1,0 +1,232 @@
+"""Falkon: fast, lightweight task execution service (paper §4).
+
+Multi-level scheduling: *resource provisioning* (DRP acquires executors,
+paying the batch-scheduler allocation latency once) is decoupled from *task
+dispatch* (streamlined, O(1), ~ms per task).  Executors register with the
+service; queued tasks are dispatched to idle executors; DRP grows/shrinks the
+pool on queue pressure; hosts with repeated failures are suspended
+("stale NFS handle" handling, §3.12).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Optional
+
+from repro.core.simclock import Clock
+
+
+@dataclasses.dataclass
+class DRPConfig:
+    min_executors: int = 0
+    max_executors: int = 64
+    alloc_latency: float = 81.0      # GRAM4+PBS allocation latency (paper §5.4.3)
+    alloc_chunk: int = 32            # executors acquired per allocation
+    idle_timeout: float = 300.0      # de-register idle executors
+    queue_per_executor: float = 1.0  # grow when queue > this x executors
+
+
+@dataclasses.dataclass
+class FalkonConfig:
+    dispatch_overhead: float = 1.0 / 487.0   # paper: 487 tasks/s streamlined
+    drp: DRPConfig = dataclasses.field(default_factory=DRPConfig)
+    host_fail_threshold: int = 2
+    host_suspend_time: float = 60.0
+
+
+class Executor:
+    __slots__ = ("id", "host", "busy", "suspended_until", "consec_failures",
+                 "idle_since", "busy_time", "tasks_done", "registered_at",
+                 "task_log")
+
+    def __init__(self, eid: int, host: str, now: float):
+        self.id = eid
+        self.host = host
+        self.busy = False
+        self.suspended_until = 0.0
+        self.consec_failures = 0
+        self.idle_since = now
+        self.busy_time = 0.0
+        self.tasks_done = 0
+        self.registered_at = now
+        self.task_log: list = []   # (start, end) per task, for Fig 18 views
+
+
+class FalkonService:
+    """Web-services interface -> in-process API (see DESIGN.md §2)."""
+
+    def __init__(self, clock: Clock, config: FalkonConfig | None = None,
+                 name: str = "falkon"):
+        self.clock = clock
+        self.cfg = config or FalkonConfig()
+        self.name = name
+        self.queue: deque = deque()
+        self.executors: list[Executor] = []
+        self._idle: deque = deque()   # O(1) dispatch: idle-executor pool
+        self._next_eid = 0
+        self._allocating = 0
+        self._dispatch_busy_until = 0.0
+        # metrics
+        self.peak_queue = 0
+        self.dispatched = 0
+        self.queue_len_log: list = []
+        self.alloc_log: list = []
+
+    # ------------------------------------------------------------------
+    # resource provisioning (DRP)
+    # ------------------------------------------------------------------
+    def provision(self, n: int):
+        """Explicitly acquire n executors (paying allocation latency once)."""
+        self._allocate(n)
+
+    def _allocate(self, n: int):
+        n = min(n, self.cfg.drp.max_executors - len(self.executors)
+                - self._allocating)
+        if n <= 0:
+            return
+        self._allocating += n
+        self.alloc_log.append((self.clock.now(), n))
+
+        def arrive():
+            self._allocating -= n
+            for _ in range(n):
+                e = Executor(self._next_eid, f"{self.name}-host{self._next_eid}",
+                             self.clock.now())
+                self._next_eid += 1
+                self.executors.append(e)
+                self._idle.append(e)
+            self._pump()
+
+        self.clock.schedule(self.cfg.drp.alloc_latency, arrive)
+
+    def _maybe_grow(self):
+        d = self.cfg.drp
+        have = len(self.executors) + self._allocating
+        if have >= d.max_executors:
+            return
+        if len(self.queue) > d.queue_per_executor * max(1, have) or have == 0:
+            want = min(d.alloc_chunk, len(self.queue) - have + 1)
+            self._allocate(max(1, want))
+
+    def _maybe_shrink(self):
+        d = self.cfg.drp
+        now = self.clock.now()
+        drop = set()
+        for e in self.executors:
+            if (not e.busy and len(self.executors) - len(drop) >
+                    d.min_executors
+                    and now - e.idle_since > d.idle_timeout
+                    and not self.queue):
+                drop.add(e.id)  # de-register (paper: idle auto-deregistration)
+        if drop:
+            self.executors = [e for e in self.executors if e.id not in drop]
+            self._idle = deque(e for e in self._idle if e.id not in drop)
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+    def submit(self, task, when_done: Callable):
+        task._falkon_done = when_done
+        task.submit_time = self.clock.now()
+        self.queue.append(task)
+        self.peak_queue = max(self.peak_queue, len(self.queue))
+        self._maybe_grow()
+        self._pump()
+
+    def _idle_executor(self) -> Optional[Executor]:
+        now = self.clock.now()
+        skipped = []
+        found = None
+        while self._idle:
+            e = self._idle.popleft()
+            if e.busy:
+                continue  # stale entry
+            if now < e.suspended_until:
+                skipped.append(e)  # suspended: back of the pool
+                continue
+            found = e
+            break
+        self._idle.extend(skipped)
+        if found is None and skipped:
+            # everyone suspended: retry when the first suspension lapses
+            wake = min(e.suspended_until for e in skipped)
+            self.clock.schedule(max(0.0, wake - now) + 1e-9, self._pump)
+        return found
+
+    def _pump(self):
+        now = self.clock.now()
+        self.queue_len_log.append((now, len(self.queue)))
+        while self.queue:
+            e = self._idle_executor()
+            if e is None:
+                break
+            task = self.queue.popleft()
+            self._dispatch(e, task)
+
+    def _dispatch(self, e: Executor, task):
+        e.busy = True
+        self.dispatched += 1
+        overhead = self.cfg.dispatch_overhead
+        start = self.clock.now() + overhead
+        task.start_time = start
+        task.host = e.host
+
+        def finish():
+            ok, value, err = _execute(task)
+            end = self.clock.now()
+            e.task_log.append((start, end))
+            e.busy = False
+            e.idle_since = end
+            e.busy_time += max(0.0, end - start)
+            if ok:
+                e.consec_failures = 0
+                e.tasks_done += 1
+            else:
+                e.consec_failures += 1
+                if e.consec_failures >= self.cfg.host_fail_threshold:
+                    # paper §3.12: suspend faulty host, reschedule elsewhere
+                    e.suspended_until = end + self.cfg.host_suspend_time
+                    e.consec_failures = 0
+            self._idle.append(e)
+            task._falkon_done(ok, value, err)
+            self._maybe_shrink()
+            self._pump()
+
+        self.clock.schedule(overhead + _sim_duration(task), finish)
+
+    # ------------------------------------------------------------------
+    def utilization(self) -> dict:
+        now = self.clock.now()
+        total_busy = sum(e.busy_time for e in self.executors)
+        total_alive = sum(now - e.registered_at for e in self.executors)
+        return {
+            "executors": len(self.executors),
+            "dispatched": self.dispatched,
+            "peak_queue": self.peak_queue,
+            "busy_time": total_busy,
+            "alive_time": total_alive,
+            "efficiency": total_busy / total_alive if total_alive else 0.0,
+        }
+
+
+def _sim_duration(task) -> float:
+    d = getattr(task, "duration", None)
+    return float(d) if d else 0.0
+
+
+def _execute(task):
+    chk = getattr(task, "fault_check", None)
+    if chk is not None:
+        try:
+            chk(task)
+        except BaseException as err:  # noqa: BLE001
+            return False, None, err
+    fn = getattr(task, "fn", None)
+    if fn is None:
+        return True, getattr(task, "sim_value", None), None
+    try:
+        args = [a.get() if hasattr(a, "get") and hasattr(a, "on_done") else a
+                for a in task.args]
+        return True, fn(*args), None
+    except BaseException as err:  # noqa: BLE001 - engine handles retries
+        return False, None, err

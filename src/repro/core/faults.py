@@ -1,0 +1,75 @@
+"""Fault model + retry policy (paper §3.12).
+
+* transient faults: retried in place (paper: GridFTP-busy style)
+* host faults: Falkon suspends the executor for `suspend_time` after
+  `host_fail_threshold` consecutive failures ("stale NFS handle" pattern)
+* site faults: after `site_fail_threshold` failures at a site, the task is
+  handed back for rescheduling at a *different* site
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable
+
+
+class TaskFailure(Exception):
+    def __init__(self, msg: str, kind: str = "transient"):
+        super().__init__(msg)
+        self.kind = kind  # transient | host | site
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    max_retries: int = 3
+    host_fail_threshold: int = 2     # consecutive failures -> suspend host
+    host_suspend_time: float = 60.0  # seconds (paper: configurable)
+    site_fail_threshold: int = 3     # same-site failures -> reschedule away
+    backoff: float = 0.0             # optional retry delay
+
+
+class FaultInjector:
+    """Deterministic failure injection for tests/benchmarks."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+        self.rules: list[Callable] = []
+
+    def fail_probability(self, p: float, kind: str = "transient",
+                         only_task: str | None = None):
+        def rule(task_name: str, host: str, attempt: int):
+            if only_task and only_task not in task_name:
+                return None
+            if self.rng.random() < p:
+                return TaskFailure(f"injected {kind} fault", kind)
+            return None
+        self.rules.append(rule)
+        return self
+
+    def fail_host(self, host: str, n_times: int, kind: str = "host"):
+        state = {"left": n_times}
+
+        def rule(task_name: str, task_host: str, attempt: int):
+            if task_host == host and state["left"] > 0:
+                state["left"] -= 1
+                return TaskFailure(f"injected fault on {host}", kind)
+            return None
+        self.rules.append(rule)
+        return self
+
+    def fail_first_n(self, task_substr: str, n: int, kind: str = "transient"):
+        state = {"left": n}
+
+        def rule(task_name: str, host: str, attempt: int):
+            if task_substr in task_name and state["left"] > 0:
+                state["left"] -= 1
+                return TaskFailure(f"injected fault in {task_name}", kind)
+            return None
+        self.rules.append(rule)
+        return self
+
+    def check(self, task_name: str, host: str, attempt: int):
+        for rule in self.rules:
+            err = rule(task_name, host, attempt)
+            if err is not None:
+                raise err

@@ -1,0 +1,100 @@
+"""Single-assignment data futures (Karajan §3.9).
+
+A `DataFuture` is a placeholder resolved exactly once; consumers register
+callbacks instead of blocking threads — Karajan's lightweight-thread model.
+The deliberately small footprint is measured by benchmarks/scalability.py
+(paper Fig 9: ~800 B/thread Karajan, ~3.2 KB/node Swift).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable
+
+_ids = itertools.count()
+
+
+class FutureError(Exception):
+    pass
+
+
+class DataFuture:
+    __slots__ = ("id", "name", "_value", "_error", "_state", "_callbacks")
+
+    PENDING, RESOLVED, FAILED = 0, 1, 2
+
+    def __init__(self, name: str = ""):
+        self.id = next(_ids)
+        self.name = name
+        self._value: Any = None
+        self._error: BaseException | None = None
+        self._state = self.PENDING
+        self._callbacks: list[Callable] = []
+
+    @property
+    def resolved(self) -> bool:
+        return self._state == self.RESOLVED
+
+    @property
+    def failed(self) -> bool:
+        return self._state == self.FAILED
+
+    @property
+    def done(self) -> bool:
+        return self._state != self.PENDING
+
+    def set(self, value: Any) -> None:
+        if self._state != self.PENDING:
+            raise FutureError(f"future {self.name or self.id} already set")
+        self._value = value
+        self._state = self.RESOLVED
+        cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            cb(self)
+
+    def set_error(self, err: BaseException) -> None:
+        if self._state != self.PENDING:
+            raise FutureError(f"future {self.name or self.id} already set")
+        self._error = err
+        self._state = self.FAILED
+        cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            cb(self)
+
+    def get(self) -> Any:
+        if self._state == self.RESOLVED:
+            return self._value
+        if self._state == self.FAILED:
+            raise self._error
+        raise FutureError(f"future {self.name or self.id} not resolved")
+
+    def on_done(self, cb: Callable[["DataFuture"], None]) -> None:
+        if self._state != self.PENDING:
+            cb(self)
+        else:
+            self._callbacks.append(cb)
+
+    def __repr__(self):
+        st = {0: "pending", 1: "resolved", 2: "failed"}[self._state]
+        return f"<Future {self.name or self.id} {st}>"
+
+
+def resolved(value: Any, name: str = "") -> DataFuture:
+    f = DataFuture(name)
+    f.set(value)
+    return f
+
+
+def when_all(futures: list[DataFuture], cb: Callable[[], None]) -> None:
+    """Invoke cb once every future is done (resolved or failed)."""
+    remaining = [len(futures)]
+    if not futures:
+        cb()
+        return
+
+    def one(_):
+        remaining[0] -= 1
+        if remaining[0] == 0:
+            cb()
+
+    for f in futures:
+        f.on_done(one)

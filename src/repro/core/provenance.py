@@ -1,0 +1,86 @@
+"""Kickstart-style provenance records (paper §3.14).
+
+Every task invocation produces an *invocation document* capturing arguments,
+host, timings, exit status and retry lineage; records are stored in a
+queryable in-memory VDC (virtual data catalog) with optional JSONL
+persistence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import socket
+from typing import Any
+
+
+@dataclasses.dataclass
+class InvocationRecord:
+    task_id: str
+    name: str
+    site: str
+    host: str
+    submit_time: float
+    start_time: float
+    end_time: float
+    exit_status: str            # ok | failed | retried
+    attempt: int
+    args_repr: str
+    outputs: list[str]
+    error: str = ""
+
+    @property
+    def queue_time(self) -> float:
+        return self.start_time - self.submit_time
+
+    @property
+    def run_time(self) -> float:
+        return self.end_time - self.start_time
+
+
+class VDC:
+    """Virtual data catalog: invocation records + produced-dataset registry."""
+
+    def __init__(self, path: str | None = None):
+        self.records: list[InvocationRecord] = []
+        self.datasets: dict[str, dict] = {}
+        self.path = path
+        self.host = socket.gethostname()
+
+    def record(self, rec: InvocationRecord) -> None:
+        self.records.append(rec)
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(dataclasses.asdict(rec)) + "\n")
+
+    def register_dataset(self, name: str, producer: str, meta: dict) -> None:
+        self.datasets[name] = {"producer": producer, **meta}
+
+    # -- queries (paper: "powerful exploration and expressive query") -------
+    def by_task(self, name: str) -> list[InvocationRecord]:
+        return [r for r in self.records if r.name == name]
+
+    def failures(self) -> list[InvocationRecord]:
+        return [r for r in self.records if r.exit_status != "ok"]
+
+    def derivation(self, dataset: str) -> dict:
+        """Trace how a dataset was derived (producer chain)."""
+        chain = []
+        cur = dataset
+        seen = set()
+        while cur in self.datasets and cur not in seen:
+            seen.add(cur)
+            info = self.datasets[cur]
+            chain.append({"dataset": cur, **info})
+            cur = info.get("derived_from", "")
+        return {"dataset": dataset, "chain": chain}
+
+    def summary(self) -> dict:
+        ok = [r for r in self.records if r.exit_status == "ok"]
+        return {
+            "invocations": len(self.records),
+            "ok": len(ok),
+            "failed": len(self.records) - len(ok),
+            "total_queue_time": sum(r.queue_time for r in self.records),
+            "total_run_time": sum(r.run_time for r in self.records),
+        }

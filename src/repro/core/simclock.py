@@ -1,0 +1,77 @@
+"""Clock abstraction: real wall-clock or deterministic discrete-event clock.
+
+Engine benchmarks that reproduce the paper's provider comparisons (PBS vs
+Falkon, Fig 6/10/11/13/14/17) run on `SimClock` — virtual time, so a
+"25,292 second" GRAM/PBS MolDyn run simulates in milliseconds and results are
+deterministic.  Measurements of *our own* dispatch overhead use `RealClock`.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from typing import Callable
+
+
+class Clock:
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        raise NotImplementedError
+
+    def run(self) -> None:
+        """Process events until idle."""
+        raise NotImplementedError
+
+
+class SimClock(Clock):
+    def __init__(self):
+        self._now = 0.0
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def now(self) -> float:
+        return self._now
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (self._now + max(0.0, delay),
+                                    next(self._seq), fn))
+
+    def run(self) -> None:
+        while self._heap:
+            t, _, fn = heapq.heappop(self._heap)
+            self._now = max(self._now, t)
+            fn()
+
+
+class RealClock(Clock):
+    """Immediate execution; `schedule` with delay==0 runs via a FIFO queue
+    (no threads — the engine is event-driven, Karajan-style)."""
+
+    def __init__(self):
+        self._queue: list = []
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        if delay <= 0:
+            self._queue.append(fn)
+        else:
+            heapq.heappush(self._heap, (self.now() + delay,
+                                        next(self._seq), fn))
+
+    def run(self) -> None:
+        while self._queue or self._heap:
+            if self._queue:
+                self._queue.pop(0)()
+                continue
+            t, _, fn = heapq.heappop(self._heap)
+            wait = t - self.now()
+            if wait > 0:
+                time.sleep(wait)
+            fn()

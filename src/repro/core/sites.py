@@ -1,0 +1,77 @@
+"""Execution sites + score-based load balancing (paper §3.13).
+
+Each site carries a responsiveness score: increased on successful, fast
+turnarounds; decreased on exceptions.  Dispatch is proportional to score and
+available capacity — the same heuristic that produced the paper's Fig 11
+218/262 split across ANL_TG / UC_TP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+
+@dataclasses.dataclass
+class SiteStats:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    busy_time: float = 0.0
+
+
+class Site:
+    def __init__(self, name: str, provider, capacity: int,
+                 apps: set[str] | None = None, score: float = 1.0):
+        self.name = name
+        self.provider = provider
+        self.capacity = capacity
+        self.apps = apps  # None = everything installed
+        self.score = score
+        self.outstanding = 0
+        self.stats = SiteStats()
+        self.suspended_until = 0.0
+
+    # -- paper: score up on success, down on exceptions ---------------------
+    def on_success(self, turnaround: float):
+        self.stats.completed += 1
+        self.stats.busy_time += turnaround
+        self.score = min(100.0, self.score * 1.05 + 0.1)
+
+    def on_failure(self):
+        self.stats.failed += 1
+        self.score = max(0.05, self.score * 0.5)
+
+    def valid_for(self, app: str | None) -> bool:
+        return self.apps is None or app is None or app in self.apps
+
+    def free_slots(self) -> int:
+        return max(0, self.capacity - self.outstanding)
+
+
+class LoadBalancer:
+    """Pick the valid site with the largest score-weighted free capacity."""
+
+    def __init__(self, sites: list[Site]):
+        self.sites = sites
+
+    def add_site(self, site: Site):
+        self.sites.append(site)
+
+    def pick(self, app: str | None, now: float,
+             require_room: bool = False, slack: float = 2.0) -> Optional[Site]:
+        best, best_w = None, -1.0
+        for s in self.sites:
+            if not s.valid_for(app) or now < s.suspended_until:
+                continue
+            if require_room and s.outstanding >= s.capacity * slack:
+                continue
+            # queue-depth-aware proportional weight: equilibrium backlog is
+            # proportional to score x capacity, so fast/large sites get more
+            # jobs (paper Fig 11) even when every site is saturated
+            w = s.score * s.capacity / (1.0 + s.outstanding)
+            if w > best_w:
+                best, best_w = s, w
+        return best
+
+    def any_valid(self, app: str | None) -> bool:
+        return any(s.valid_for(app) for s in self.sites)

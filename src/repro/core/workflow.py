@@ -1,0 +1,159 @@
+"""SwiftScript-style workflow DSL (paper §3.1-3.7), embedded in Python.
+
+* atomic procedures    — typed interfaces to callables (paper lines 7-12)
+* compound procedures  — plain Python composition over futures (lines 13-25)
+* foreach              — *dynamic* parallel iteration: the collection may be
+  a future or a mapped Dataset whose members are only known at runtime
+  (paper §3.6, the Montage overlap table) — expansion happens on resolution
+* when                 — conditional execution on runtime data
+
+Implicit parallelism: procedures return futures immediately; data
+dependencies alone order execution (pipelining, §3.13).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+from repro.core.engine import Engine
+from repro.core.futures import DataFuture, resolved, when_all
+from repro.core.xdtm import Dataset, Mapper, typecheck
+
+
+class Procedure:
+    """An atomic procedure: a typed, dispatchable interface to a callable."""
+
+    def __init__(self, wf: "Workflow", fn: Callable | None, name: str,
+                 duration: float | Callable | None = None,
+                 app: str | None = None, durable: bool = False,
+                 input_types: tuple = (), vmap_key=None):
+        self.wf = wf
+        self.fn = fn
+        self.name = name
+        self.duration = duration
+        self.app = app or name
+        self.durable = durable
+        self.input_types = input_types
+        self.vmap_key = vmap_key
+
+    def __call__(self, *args) -> DataFuture:
+        if self.input_types:
+            for a, t in zip(args, self.input_types):
+                if not isinstance(a, DataFuture) and t is not None:
+                    if not typecheck(a, t):
+                        raise TypeError(
+                            f"{self.name}: argument {a!r} fails type {t}")
+        dur = self.duration
+        if callable(dur):
+            dur = None  # resolved at dispatch; keep simple: static durations
+        return self.wf.engine.submit(
+            self.name, self.fn, list(args), duration=dur, app=self.app,
+            durable=self.durable, vmap_key=self.vmap_key)
+
+
+class Workflow:
+    def __init__(self, name: str, engine: Engine):
+        self.name = name
+        self.engine = engine
+
+    # ------------------------------------------------------------------
+    def atomic(self, fn: Callable | None = None, *, name: str | None = None,
+               duration: float | None = None, app: str | None = None,
+               durable: bool = False, input_types: tuple = (),
+               vmap_key=None):
+        """Decorator: define an atomic procedure."""
+
+        def wrap(f):
+            return Procedure(self, f, name or (f.__name__ if f else "task"),
+                             duration=duration, app=app, durable=durable,
+                             input_types=input_types, vmap_key=vmap_key)
+
+        if fn is not None:
+            return wrap(fn)
+        return wrap
+
+    def sim_proc(self, name: str, duration: float, app: str | None = None):
+        """Procedure with a simulated duration and no body (benchmarks)."""
+        return Procedure(self, None, name, duration=duration, app=app)
+
+    # ------------------------------------------------------------------
+    def foreach(self, collection, body: Callable[[Any], Any],
+                name: str = "foreach") -> DataFuture:
+        """Parallel iteration with runtime expansion (paper §3.4/3.6).
+
+        `collection` may be: a list, a Dataset (mapper resolved lazily at
+        expansion time), or a DataFuture resolving to either.  `body(item)`
+        runs at expansion time and may submit tasks (returning futures); the
+        result future resolves to the list of all body results.
+        """
+        out = DataFuture(name=name)
+        coll_f = collection if isinstance(collection, DataFuture) \
+            else resolved(collection)
+
+        def expand(f: DataFuture):
+            if f.failed:
+                out.set_error(f._error)
+                return
+            coll = f.get()
+            if isinstance(coll, Dataset):
+                members = coll.members()        # dynamic mapping (§3.6)
+            elif isinstance(coll, Mapper):
+                members = coll.members()
+            else:
+                members = list(coll)
+            results = [body(m) for m in members]
+            futs = [r for r in results if isinstance(r, DataFuture)]
+
+            def finish():
+                bad = [ff for ff in futs if ff.failed]
+                if bad:
+                    out.set_error(bad[0]._error)
+                    return
+                out.set([r.get() if isinstance(r, DataFuture) else r
+                         for r in results])
+
+            when_all(futs, finish)
+
+        coll_f.on_done(expand)
+        return out
+
+    # ------------------------------------------------------------------
+    def when(self, cond, then_fn: Callable[[], Any],
+             else_fn: Callable[[], Any] | None = None,
+             name: str = "when") -> DataFuture:
+        """Conditional execution on runtime data (paper §3.6, Montage
+        sub-region co-add decision)."""
+        out = DataFuture(name=name)
+        cond_f = cond if isinstance(cond, DataFuture) else resolved(cond)
+
+        def branch(f: DataFuture):
+            if f.failed:
+                out.set_error(f._error)
+                return
+            res = then_fn() if f.get() else (else_fn() if else_fn else None)
+            if isinstance(res, DataFuture):
+                res.on_done(lambda r: out.set_error(r._error) if r.failed
+                            else out.set(r.get()))
+            else:
+                out.set(res)
+
+        cond_f.on_done(branch)
+        return out
+
+    # ------------------------------------------------------------------
+    def gather(self, futures: list[DataFuture], name: str = "gather") \
+            -> DataFuture:
+        out = DataFuture(name=name)
+
+        def finish():
+            bad = [f for f in futures if f.failed]
+            if bad:
+                out.set_error(bad[0]._error)
+            else:
+                out.set([f.get() for f in futures])
+
+        when_all(list(futures), finish)
+        return out
+
+    def run(self):
+        self.engine.run()

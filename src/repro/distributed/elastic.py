@@ -1,0 +1,60 @@
+"""Elastic data-parallel scaling (Falkon DRP applied to training).
+
+The paper's DRP grows/shrinks the executor pool on queue pressure; here the
+"pool" is the data-parallel width.  Because the data pipeline is
+stateless-addressable and optimizer state is sharded by logical rules,
+rescaling between steps is: build the new mesh -> re-resolve shardings ->
+`jax.device_put` the state.  The policy object mirrors DRPConfig.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models.params import default_rules, resolve_spec
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    min_dp: int = 1
+    max_dp: int = 64
+    grow_threshold: float = 2.0    # backlog/step-time ratio to grow
+    shrink_threshold: float = 0.25
+
+    def decide(self, current_dp: int, backlog: float, step_time: float) -> int:
+        ratio = backlog / max(step_time, 1e-9)
+        if ratio > self.grow_threshold and current_dp < self.max_dp:
+            return min(self.max_dp, current_dp * 2)
+        if ratio < self.shrink_threshold and current_dp > self.min_dp:
+            return max(self.min_dp, current_dp // 2)
+        return current_dp
+
+
+def make_mesh_for_dp(dp: int, model: int = 1):
+    devs = jax.devices()
+    need = dp * model
+    if len(devs) < need:
+        raise ValueError(f"need {need} devices, have {len(devs)}")
+    return jax.make_mesh(
+        (dp, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        devices=devs[:need])
+
+
+def reshard_tree(tree, descs, mesh: Mesh, rules=None):
+    """Re-place a (possibly differently-sharded) state tree onto `mesh`."""
+    rules = rules or default_rules()
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    from jax.sharding import PartitionSpec
+    from repro.models.params import tree_map_desc
+    spec_tree = tree_map_desc(lambda d: resolve_spec(d, rules, mesh_shape),
+                              descs)
+    import jax.tree_util as jtu
+    specs = jtu.tree_leaves(spec_tree,
+                            is_leaf=lambda x: isinstance(x, PartitionSpec))
+    leaves, tdef = jtu.tree_flatten(tree)
+    out = [jax.device_put(l, NamedSharding(mesh, s))
+           for l, s in zip(leaves, specs)]
+    return jtu.tree_unflatten(tdef, out)

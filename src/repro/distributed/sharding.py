@@ -1,0 +1,76 @@
+"""Logical-axis sharding constraints for activations.
+
+Model code annotates intermediates with *logical* axes
+(``constrain(x, ("batch", None, "heads", None))``).  When an `AxisRules`
+context is active (set up by the launcher), these resolve to
+``jax.lax.with_sharding_constraint`` with divisibility fallback; otherwise
+they are no-ops (smoke tests run on 1 device without a mesh).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class AxisRules:
+    def __init__(self, rules: dict[str, Any], mesh: Mesh):
+        self.rules = rules
+        self.mesh = mesh
+        self.mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _axis_size(self, mapped) -> int:
+        if mapped is None:
+            return 1
+        if isinstance(mapped, str):
+            return self.mesh_shape.get(mapped, 1)
+        return math.prod(self.mesh_shape.get(a, 1) for a in mapped)
+
+    def spec(self, axes, shape) -> P:
+        parts = []
+        used: set = set()
+        for dim, ax in zip(shape, axes):
+            mapped = self.rules.get(ax) if ax is not None else None
+            if mapped is None:
+                parts.append(None)
+                continue
+            names = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+            size = self._axis_size(mapped)
+            if size <= 1 or dim % size != 0 or any(n in used for n in names):
+                parts.append(None)
+                continue
+            used.update(names)
+            parts.append(mapped)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+
+@contextlib.contextmanager
+def use_axis_rules(rules: AxisRules | None):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+def constrain(x, axes):
+    """Annotate activation x with logical axes; no-op without an active mesh."""
+    r = current_rules()
+    if r is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = r.spec(axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))

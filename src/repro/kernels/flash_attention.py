@@ -1,0 +1,135 @@
+"""Flash attention Pallas kernel (TPU target).
+
+Canonical TPU structure: grid = (batch*q_heads, q_blocks, kv_blocks) with the
+LAST grid dim sequential, so the online-softmax accumulators (m / l / acc)
+live in VMEM scratch and persist across kv-block steps.  Causal and
+sliding-window masks skip fully-masked kv blocks with `pl.when` — on TPU the
+skipped grid step costs only the (empty) control flow, which is how the
+kernel achieves O(S·W) work for local attention.
+
+GQA is handled in the k/v BlockSpec index maps (q head h reads kv head
+h // group), so repeated kv heads are never materialized.
+
+Block shapes are MXU/VPU-aligned: block_q x head_dim and block_k x head_dim
+tiles (multiples of 128 in the lane dim for f32/bf16); m/l scratch is
+(block_q, 128) to match the sublane x lane layout.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # block-level skip: fully above the diagonal / outside the window
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + block_q - 1)
+    if window > 0:
+        live = jnp.logical_and(live,
+                               k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0]                       # (block_q, D)
+        k = k_ref[0]                       # (block_k, D)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window > 0:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]              # (block_q, 1)
+        l_prev = l_scr[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_scr[:, :1]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D) -> (B, Hq, S, D)."""
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    while S % block_q:
+        block_q //= 2
+    while T % block_k:
+        block_k //= 2
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (B * Hq, S // block_q, T // block_k)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D),
+                         lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, ik, g=group, hq=Hq:
+                         ((bh // hq) * (hq // g) + (bh % hq) // g, ik, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, ik, g=group, hq=Hq:
+                         ((bh // hq) * (hq // g) + (bh % hq) // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B * Hq, S, D),
+      k.reshape(B * Hkv, T, D),
+      v.reshape(B * Hkv, T, D)).reshape(B, Hq, S, D)

@@ -1,0 +1,97 @@
+"""Mamba-1 selective-scan Pallas kernel (TPU target).
+
+h_t = exp(dt_t A) h_{t-1} + (dt_t u_t) B_t ;  y_t = h_t . C_t
+
+grid = (batch, d_inner_blocks, seq_chunks), LAST dim sequential; the
+(block_d, N) state is VMEM scratch carried across chunks.  dA / dBu are
+computed on the fly inside the kernel — the (S, D, N) expansion never
+touches HBM, which is the entire point of the kernel (the pure-XLA chunked
+reference materializes chunk-local (chunk, D, N) intermediates to HBM; see
+the falcon-mamba roofline discussion in EXPERIMENTS.md).
+
+d_inner blocks are lane-aligned; VMEM working set = chunk x block_d x N x 4B.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _combine(p, q):
+    a1, b1 = p
+    a2, b2 = q
+    return a1 * a2, a2 * b1 + b2
+
+
+def _kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, h0_ref, y_ref, hfin_ref,
+            h_scr):
+    it = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)        # (chunk, block_d)
+    dt = dt_ref[0].astype(jnp.float32)
+    A = A_ref[...].astype(jnp.float32)      # (block_d, N)
+    Bm = B_ref[0].astype(jnp.float32)       # (chunk, N)
+    Cm = C_ref[0].astype(jnp.float32)
+
+    dA = jnp.exp(dt[:, :, None] * A[None])              # (chunk, bd, N)
+    dBu = (dt * u)[:, :, None] * Bm[:, None, :]         # (chunk, bd, N)
+    accA, accB = jax.lax.associative_scan(_combine, (dA, dBu), axis=0)
+    hs = accA * h_scr[...][None] + accB                 # (chunk, bd, N)
+    y = jnp.sum(hs * Cm[:, None, :], axis=-1)           # (chunk, bd)
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_scr[...] = hs[-1]
+
+    @pl.when(it == nt - 1)
+    def _finish():
+        hfin_ref[0] = h_scr[...].astype(hfin_ref.dtype)
+
+
+def mamba_scan(u, dt, A, Bm, Cm, h0=None, *, chunk: int = 64,
+               block_d: int = 256, interpret: bool | None = None):
+    """u, dt: (B, S, D); A: (D, N); Bm, Cm: (B, S, N); h0: (B, D, N).
+
+    Returns (y: (B, S, D), h_final: (B, D, N))."""
+    B, S, D = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    block_d = min(block_d, D)
+    while D % block_d:
+        block_d //= 2
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (B, D // block_d, S // chunk)
+
+    y, h_fin = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda bb, jd, it: (bb, it, jd)),
+            pl.BlockSpec((1, chunk, block_d), lambda bb, jd, it: (bb, it, jd)),
+            pl.BlockSpec((block_d, N), lambda bb, jd, it: (jd, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bb, jd, it: (bb, it, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bb, jd, it: (bb, it, 0)),
+            pl.BlockSpec((1, block_d, N), lambda bb, jd, it: (bb, jd, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda bb, jd, it: (bb, it, jd)),
+            pl.BlockSpec((1, block_d, N), lambda bb, jd, it: (bb, jd, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), u.dtype),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, Bm, Cm, h0)
+    return y, h_fin

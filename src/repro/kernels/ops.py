@@ -1,0 +1,35 @@
+"""jit'd wrappers over the Pallas kernels (the public kernel API).
+
+Each wrapper auto-selects interpret mode off-TPU and is shape/dtype swept
+against the `ref.py` oracles in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    block_q=128, block_k=128, interpret=None):
+    return _flash(q, k, v, causal=causal, window=window, scale=scale,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru_scan(a, b, h0, *, chunk=256, block_w=512, interpret=None):
+    return _rglru(a, b, h0, chunk=chunk, block_w=block_w, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def mamba_scan(u, dt, A, Bm, Cm, h0=None, *, chunk=64, block_d=256,
+               interpret=None):
+    return _mamba(u, dt, A, Bm, Cm, h0, chunk=chunk, block_d=block_d,
+                  interpret=interpret)

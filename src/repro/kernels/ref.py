@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D); GQA by head repetition."""
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    if Hq != Hkv:
+        k = jnp.repeat(k, Hq // Hkv, axis=1)
+        v = jnp.repeat(v, Hq // Hkv, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def ref_linear_scan(a, b, h0):
+    """RG-LRU-style recurrence h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (B, S, W) fp32; h0: (B, W).  Returns (hs: (B, S, W), h_final)."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h_fin, hs = jax.lax.scan(step, h0,
+                             (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_fin
+
+
+def ref_selective_scan(u, dt, A, Bm, Cm, h0=None):
+    """Mamba-1 selective scan.
+
+    u, dt: (B, S, D); A: (D, N); Bm, Cm: (B, S, N); h0: (B, D, N).
+    Returns (y: (B, S, D), h_final)."""
+    B, S, D = u.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((B, D, N), jnp.float32) if h0 is None else h0
+
+    def step(h, xs):
+        u_t, dt_t, B_t, C_t = xs
+        dA = jnp.exp(dt_t[..., None] * A[None])           # (B, D, N)
+        dBu = (dt_t * u_t)[..., None] * B_t[:, None, :]   # (B, D, N)
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(u, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_fin

@@ -1,0 +1,81 @@
+"""RG-LRU linear-recurrence Pallas kernel (TPU target).
+
+h_t = a_t * h_{t-1} + b_t over (batch, seq, width), evaluated in time chunks:
+grid = (batch, width_blocks, seq_chunks) with the LAST dim sequential; the
+carried state h lives in VMEM scratch across chunk steps.  Inside a chunk the
+recurrence is a log-depth associative scan over VPU-width lanes — the TPU
+mapping of the chunked evaluation used by `repro.models.rglru`.
+
+Width blocks are lane-aligned (multiples of 128); the time chunk bounds the
+VMEM working set (chunk x block_w x 4 B per operand).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _combine(p, q):
+    a1, b1 = p
+    a2, b2 = q
+    return a1 * a2, a2 * b1 + b2
+
+
+def _kernel(a_ref, b_ref, h0_ref, y_ref, hfin_ref, h_scr):
+    it = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)     # (chunk, block_w)
+    b = b_ref[0].astype(jnp.float32)
+    accA, accB = jax.lax.associative_scan(_combine, (a, b), axis=0)
+    hs = accA * h_scr[...] + accB        # h carried in: (1, block_w) bcast
+    y_ref[0] = hs.astype(y_ref.dtype)
+    h_scr[...] = hs[-1:][...]
+
+    @pl.when(it == nt - 1)
+    def _finish():
+        hfin_ref[...] = h_scr[...].astype(hfin_ref.dtype)
+
+
+def rglru_scan(a, b, h0, *, chunk: int = 256, block_w: int = 512,
+               interpret: bool | None = None):
+    """a, b: (B, S, W); h0: (B, W) -> (hs: (B, S, W), h_final: (B, W))."""
+    B, S, W = a.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    block_w = min(block_w, W)
+    while W % block_w:
+        block_w //= 2
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (B, W // block_w, S // chunk)
+
+    y, h_fin = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_w), lambda bb, jw, it: (bb, it, jw)),
+            pl.BlockSpec((1, chunk, block_w), lambda bb, jw, it: (bb, it, jw)),
+            pl.BlockSpec((1, block_w), lambda bb, jw, it: (bb, jw)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_w), lambda bb, jw, it: (bb, it, jw)),
+            pl.BlockSpec((1, block_w), lambda bb, jw, it: (bb, jw)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), a.dtype),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y, h_fin

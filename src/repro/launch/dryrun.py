@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the dry-run needs 512 placeholder host devices so
+`jax.make_mesh` can build the production meshes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, runnable_cells
+from repro.configs import registry
+from repro.launch import hlo_analysis, hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.distributed.sharding import AxisRules, use_axis_rules
+from repro.optim import adamw
+from repro.train.steps import make_prefill_step, make_serve_step, make_train_step
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode: D = batch
+    tokens per step; fwd-only shapes use 2·N·D."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch  # decode: one token per sequence
+
+
+def _shardings_of(tree):
+    return jax.tree_util.tree_map(lambda s: s.sharding, tree)
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             rule_overrides=None, hyper=None, cfg=None,
+             constrain_grads: bool = False) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    spec = input_specs(arch, shape, mesh, rule_overrides, cfg=cfg)
+    cfg = spec.cfg
+    rules = AxisRules(spec.rules, mesh)
+
+    if spec.kind == "train":
+        hp = hyper or adamw.Hyper()
+        gsh = _shardings_of(spec.args[1]["m"]) if constrain_grads else None
+        fn = make_train_step(cfg, hp, grad_shardings=gsh)
+        params_sh, opt_sh = (_shardings_of(spec.args[0]),
+                             _shardings_of(spec.args[1]))
+        with use_axis_rules(rules):
+            out_struct = jax.eval_shape(fn, *spec.args)
+        metrics_sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), out_struct[2])
+        out_shardings = (params_sh, opt_sh, metrics_sh)
+    elif spec.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        # pin cache out-shardings to the cell's cache specs
+        from repro.launch.specs import cache_specs
+        cs = cache_specs(cfg, mesh, spec.rules, spec.cell.global_batch,
+                         spec.cell.seq_len)
+        out_shardings = (NamedSharding(mesh, P()), _shardings_of(cs))
+    else:  # decode
+        fn = make_serve_step(cfg)
+        tok_sh = spec.args[2].sharding
+        caches_sh = _shardings_of(spec.args[1])
+        out_shardings = (tok_sh, caches_sh)
+
+    in_shardings = _shardings_of(spec.args)
+
+    with mesh:
+        with use_axis_rules(rules):
+            jitted = jax.jit(fn, in_shardings=in_shardings,
+                             out_shardings=out_shardings,
+                             donate_argnums=spec.donate)
+            lowered = jitted.lower(*spec.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-corrected cost model (XLA's cost_analysis counts while
+    # bodies once; see hlo_cost.py)
+    cost = hlo_cost.analyze(hlo)
+    coll = hlo_analysis.CollectiveStats(
+        per_device_wire_bytes=cost.coll_wire, by_kind=cost.coll_by_kind,
+        count=int(sum(v["count"] for v in cost.coll_by_kind.values())))
+    roof = hlo_analysis.roofline(
+        {"flops": cost.flops, "bytes accessed": cost.bytes}, coll, n_chips,
+        model_flops(cfg, spec.cell))
+    roof["xla_cost_analysis_raw"] = {
+        "flops": float(xla_cost.get("flops", 0.0)),
+        "bytes_accessed": float(xla_cost.get("bytes accessed", 0.0)),
+        "note": "while bodies counted once by XLA; corrected numbers above",
+    }
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": spec.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "roofline": roof,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = runnable_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (cached)")
+                n_ok += 1
+                continue
+            try:
+                res = run_cell(arch, shape, multi_pod=mp)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=2)
+                r = res["roofline"]
+                print(f"[ ok ] {tag}: compile={res['compile_s']}s "
+                      f"dominant={r['dominant']} "
+                      f"compute={r['compute_term_s']:.4f}s "
+                      f"memory={r['memory_term_s']:.4f}s "
+                      f"coll={r['collective_term_s']:.4f}s "
+                      f"useful={r.get('useful_flops_ratio', 0):.3f}",
+                      flush=True)
+                n_ok += 1
+            except Exception as e:
+                n_fail += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                with open(os.path.join(args.out, tag + ".err"), "w") as f:
+                    f.write(traceback.format_exc())
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,130 @@
+"""Post-compile HLO analysis: collective byte counting + 3-term roofline.
+
+`cost_analysis()` supplies HLO FLOPs and bytes; collective bytes are NOT in
+cost_analysis, so we parse the optimized HLO text and sum per-device wire
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute with standard ring formulas.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+HW = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?P<lhs>[^=]*?)\s"
+    r"(?P<op>all-reduce-start|all-gather-start|collective-permute-start|"
+    r"reduce-scatter|all-to-all|all-reduce|all-gather|collective-permute)"
+    r"(?:\.\d+)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_device_wire_bytes: float = 0.0
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, wire: float):
+        self.per_device_wire_bytes += wire
+        k = self.by_kind.setdefault(kind, {"bytes": 0.0, "count": 0})
+        k["bytes"] += wire
+        k["count"] += 1
+        self.count += 1
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device wire bytes (ring formulas) for every collective op."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op").replace("-start", "")
+        result_bytes = _shape_bytes(m.group("lhs"))
+        n = _group_size(line)
+        if op == "all-gather":
+            wire = result_bytes * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = result_bytes * (n - 1)
+        elif op == "all-reduce":
+            wire = result_bytes * 2 * (n - 1) / n
+        elif op == "all-to-all":
+            wire = result_bytes * (n - 1) / n
+        else:  # collective-permute
+            wire = result_bytes
+        stats.add(op, wire)
+    return stats
+
+
+def roofline(cost: dict, coll: CollectiveStats, n_chips: int,
+             model_flops: float | None = None) -> dict:
+    """Three roofline terms in seconds (per step, per chip)."""
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    # cost_analysis reports per-program (per-device SPMD program) numbers
+    compute_t = hlo_flops / HW["peak_flops"]
+    memory_t = hlo_bytes / HW["hbm_bw"]
+    coll_t = coll.per_device_wire_bytes / HW["ici_bw"]
+    dominant = max(
+        [("compute", compute_t), ("memory", memory_t), ("collective", coll_t)],
+        key=lambda kv: kv[1])[0]
+    out = {
+        "hlo_flops_per_device": hlo_flops,
+        "hlo_bytes_per_device": hlo_bytes,
+        "collective_bytes_per_device": coll.per_device_wire_bytes,
+        "collective_ops": coll.by_kind,
+        "compute_term_s": compute_t,
+        "memory_term_s": memory_t,
+        "collective_term_s": coll_t,
+        "dominant": dominant,
+        "bound_time_s": max(compute_t, memory_t, coll_t),
+    }
+    if model_flops is not None:
+        out["model_flops_total"] = model_flops
+        out["model_flops_per_device"] = model_flops / n_chips
+        if hlo_flops > 0:
+            out["useful_flops_ratio"] = (model_flops / n_chips) / hlo_flops
+        out["mfu_bound"] = (model_flops / n_chips / HW["peak_flops"]) / \
+            max(compute_t, memory_t, coll_t, 1e-30)
+    return out

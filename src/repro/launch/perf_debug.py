@@ -1,0 +1,81 @@
+"""Perf-iteration profiler: per-op cost attribution from the compiled HLO.
+
+Given a dry-run cell, prints the top collective ops and top HBM-byte ops
+with while-loop multiplicities — the "profile" used by the §Perf
+hypothesis -> change -> measure loop (no real-TPU timings exist here; the
+lowered IR is the profile, per the assignment).
+"""
+from __future__ import annotations
+
+from repro.launch import hlo_cost as H
+
+
+def attribute(hlo_text: str):
+    mod = H.HloModule(hlo_text)
+    coll_records = []
+    byte_records = []
+
+    def walk(comp, mult):
+        for op in mod.comps.get(comp, []):
+            kind = op.kind
+            if kind == "while":
+                body = H._BODY_RE.search(op.attrs)
+                cond = H._COND_RE.search(op.attrs)
+                trips = mod._trip_count(op, cond.group(1) if cond else None)
+                if body:
+                    walk(body.group(1), mult * trips)
+                continue
+            if kind in ("call", "conditional"):
+                m = H._CALLS_RE.search(op.attrs)
+                if m:
+                    walk(m.group(1), mult)
+            if any(kind.startswith(c) for c in H.COLLECTIVES) \
+                    and not kind.endswith("-done"):
+                base = kind.replace("-start", "")
+                rb = H._shape_bytes(op.result)
+                n = mod._group_size(op.attrs + op.args)
+                if base == "all-gather":
+                    wire = rb * (n - 1) / n
+                elif base == "reduce-scatter":
+                    wire = rb * (n - 1)
+                elif base == "all-reduce":
+                    wire = rb * 2 * (n - 1) / n
+                elif base == "all-to-all":
+                    wire = rb * (n - 1) / n
+                else:
+                    wire = rb
+                coll_records.append(
+                    (wire * mult, mult, wire, base, comp, op.name,
+                     op.result[:60], op.raw.split("metadata")[-1][:160]))
+            if kind == "fusion":
+                # descend for collectives inside fusions
+                m = H._CALLS_RE.search(op.attrs)
+                if m:
+                    sub = mod.comp_cost(m.group(1), fused=True)
+                    if sub.coll_wire:
+                        coll_records.append(
+                            (sub.coll_wire * mult, mult, sub.coll_wire,
+                             "fused", comp, op.name, op.result[:60], ""))
+            b = mod.op_bytes(comp, op)
+            if b:
+                byte_records.append((b * mult, mult, b, kind, comp, op.name))
+
+    walk(mod.entry, 1.0)
+    coll_records.sort(reverse=True)
+    byte_records.sort(reverse=True)
+    return coll_records, byte_records
+
+
+def report(hlo_text: str, top: int = 12) -> str:
+    coll, byts = attribute(hlo_text)
+    lines = ["== top collectives (wire bytes x multiplicity) =="]
+    for r in coll[:top]:
+        lines.append(f"  {r[0]:.3e}  x{int(r[1]):<5d} per={r[2]:.2e} "
+                     f"{r[3]:<14s} {r[5][:40]:42s} {r[6]}")
+        if r[7]:
+            lines.append(f"      {r[7]}")
+    lines.append("== top HBM ops ==")
+    for r in byts[:top]:
+        lines.append(f"  {r[0]:.3e}  x{int(r[1]):<5d} per={r[2]:.2e} "
+                     f"{r[3]:<18s} {r[5][:50]}")
+    return "\n".join(lines)

@@ -1,0 +1,184 @@
+"""Abstract input specs + shardings for every (arch x shape x mesh) cell.
+
+`input_specs()` returns weak-type-correct `jax.ShapeDtypeStruct` stand-ins
+(with `NamedSharding`s attached) for every input of the lowered step —
+no device allocation ever happens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeCell
+from repro.configs import registry
+from repro.launch.mesh import data_axes
+from repro.models import transformer as T
+from repro.models.params import (ParamDesc, default_rules, resolve_spec,
+                                 tree_map_desc)
+
+
+# ---------------------------------------------------------------------------
+# per-cell axis rules
+# ---------------------------------------------------------------------------
+
+def axis_rules_for(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                   overrides: dict[str, Any] | None = None) -> dict[str, Any]:
+    multi_pod = "pod" in mesh.axis_names
+    rules = default_rules(multi_pod)
+    if cell.kind in ("train", "prefill"):
+        # Megatron-style activation sequence sharding between layers
+        rules["seq_act"] = "model"
+    if cell.kind in ("prefill", "decode"):
+        # KV caches: shard the sequence dim over the model axis (frees the
+        # kv_heads fallback problem for 20/28-head archs and MLA's headless
+        # latent cache).  long_500k (batch=1) uses the data axis instead —
+        # sequence-parallel decode.
+        rules["kv_seq"] = "data" if cell.name == "long_500k" else "model"
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _mesh_shape(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, rules) -> Any:
+    descs = T.build_descriptors(cfg)
+    ms = _mesh_shape(mesh)
+    pdt = jnp.dtype(cfg.param_dtype)
+
+    def mk(d: ParamDesc):
+        dtype = d.dtype if d.dtype is not None else pdt
+        # parameters keep their declared dtype except float params follow cfg
+        if jnp.issubdtype(dtype, jnp.floating):
+            dtype = pdt
+        return _sds(d.shape, dtype, mesh, resolve_spec(d, rules, ms))
+
+    return tree_map_desc(mk, descs)
+
+
+def opt_rule_extend(spec: P, shape, ms: dict[str, int], data_axis: str) -> P:
+    """ZeRO-style: additionally shard optimizer-state tensors over the data
+    axis on the largest still-unsharded divisible dim."""
+    used = set()
+    for s in spec:
+        if s is None:
+            continue
+        used.update((s,) if isinstance(s, str) else s)
+    if data_axis in used:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, -1
+    for i, (dim, s) in enumerate(zip(shape, parts)):
+        if s is None and dim % ms.get(data_axis, 1) == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        parts[best] = data_axis
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, rules) -> Any:
+    descs = T.build_descriptors(cfg)
+    ms = _mesh_shape(mesh)
+    da = "data"
+
+    def mk(d: ParamDesc):
+        spec = resolve_spec(d, rules, ms)
+        spec = opt_rule_extend(spec, d.shape, ms, da)
+        return _sds(d.shape, jnp.float32, mesh, spec)
+
+    one = tree_map_desc(mk, descs)
+    two = tree_map_desc(mk, descs)
+    return {"m": one, "v": two}
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, rules, batch: int, seq: int):
+    descs = T.build_cache_descriptors(cfg, batch, seq)
+    ms = _mesh_shape(mesh)
+
+    def mk(d: ParamDesc):
+        return _sds(d.shape, d.dtype, mesh, resolve_spec(d, rules, ms))
+
+    return [tree_map_desc(mk, g) for g in descs]
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell,
+                with_labels: bool):
+    da = data_axes(mesh)
+    dspec = da if len(da) > 1 else da[0]
+    B, S = cell.global_batch, cell.seq_len
+    bspec = dspec if B % _axis_size_of(mesh, da) == 0 else None
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, P(bspec))}
+    if with_labels:
+        out["labels"] = _sds((B, S), jnp.int32, mesh, P(bspec))
+    if cfg.enc_dec:
+        out["enc_feats"] = _sds((B, cfg.enc_frames, cfg.d_model), jnp.float32,
+                                mesh, P(bspec))
+    return out
+
+
+def _axis_size_of(mesh, axes) -> int:
+    ms = _mesh_shape(mesh)
+    n = 1
+    for a in axes:
+        n *= ms.get(a, 1)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# full per-cell spec bundles
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    cell: ShapeCell
+    rules: dict[str, Any]
+    args: tuple          # abstract args for the step fn
+    donate: tuple[int, ...]
+    kind: str
+
+
+def input_specs(arch: str, shape: str, mesh: Mesh,
+                rule_overrides: dict[str, Any] | None = None,
+                cfg: ModelConfig | None = None) -> CellSpec:
+    cfg = cfg or registry.get_config(arch)
+    cell = SHAPES[shape]
+    rules = axis_rules_for(cfg, cell, mesh, rule_overrides)
+    params = param_specs(cfg, mesh, rules)
+    step_spec = _sds((), jnp.int32, mesh, P())
+
+    if cell.kind == "train":
+        opt = opt_specs(cfg, mesh, rules)
+        batch = batch_specs(cfg, mesh, cell, with_labels=True)
+        args = (params, opt, batch, step_spec)
+        donate = (0, 1)
+    elif cell.kind == "prefill":
+        batch = batch_specs(cfg, mesh, cell, with_labels=False)
+        args = (params, batch)
+        donate = ()
+    else:  # decode
+        caches = cache_specs(cfg, mesh, rules, cell.global_batch, cell.seq_len)
+        da = data_axes(mesh)
+        B = cell.global_batch
+        bspec = (da if len(da) > 1 else da[0]) \
+            if B % _axis_size_of(mesh, da) == 0 else None
+        tokens = _sds((B, 1), jnp.int32, mesh, P(bspec))
+        pos_t = _sds((), jnp.int32, mesh, P())
+        args = (params, caches, tokens, pos_t)
+        donate = (1,)
+    return CellSpec(arch=arch, shape=shape, cfg=cfg, cell=cell, rules=rules,
+                    args=args, donate=donate, kind=cell.kind)

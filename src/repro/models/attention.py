@@ -1,0 +1,411 @@
+"""Attention: blocked full/causal, banded local-window, GQA and MLA layers.
+
+Memory-bounded pure-JAX implementations (these are also the oracles for the
+Pallas kernels in `repro.kernels`):
+
+* causal full attention — "super-row" decomposition: the sequence is split
+  into `n_super` static row bands; band s only attends over its prefix
+  (static length), with online softmax over kv blocks inside the band.
+  Wasted FLOPs vs. exact causal ≈ 1/(2·n_super)  (6% at n_super=8).
+* local (windowed) attention — banded gather: per q block, a static
+  (window + q_block) kv slice is taken, so FLOPs are O(S·window), not O(S²).
+* decode — single-query dense over the cache (global) or ring buffer (local).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamDesc
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core attention math (q, k, v already per-head: (B, S, H, D))
+# ---------------------------------------------------------------------------
+
+def _dense_attn(q, k, v, mask, scale):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def _online_rows(q_band, k_band, v_band, scale, kv_block, q_start, k_start):
+    """Online-softmax over kv blocks for one q band.
+
+    q_band: (B, Sr, H, D); k/v_band: (B, P, H, D); causal mask from absolute
+    positions (q_start + row, k_start + col).
+    """
+    B, Sr, H, D = q_band.shape
+    P_len = k_band.shape[1]
+    nk = P_len // kv_block
+    qt = jnp.swapaxes(q_band, 1, 2)  # (B,H,Sr,D)
+    kt = jnp.swapaxes(k_band, 1, 2).reshape(B, H, nk, kv_block, D)
+    vt = jnp.swapaxes(v_band, 1, 2).reshape(B, H, nk, kv_block, v_band.shape[-1])
+    kt = jnp.moveaxis(kt, 2, 0)  # (nk,B,H,kb,D)
+    vt = jnp.moveaxis(vt, 2, 0)
+
+    m0 = jnp.full((B, H, Sr), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, H, Sr), jnp.float32)
+    a0 = jnp.zeros((B, H, Sr, v_band.shape[-1]), jnp.float32)
+    rows = q_start + jnp.arange(Sr)
+
+    def step(carry, xs):
+        m, den, acc = carry
+        kb, vb, j = xs
+        cols = k_start + j * kv_block + jnp.arange(kv_block)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qt, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(cols[None, None, None, :] <= rows[None, None, :, None],
+                      s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        den = den * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, den, acc), None
+
+    (m, den, acc), _ = jax.lax.scan(step, (m0, d0, a0),
+                                    (kt, vt, jnp.arange(nk)))
+    o = acc / jnp.maximum(den[..., None], 1e-30)
+    return jnp.swapaxes(o, 1, 2).astype(q_band.dtype)  # (B,Sr,H,Dv)
+
+
+def causal_attention(q, k, v, *, scale, n_super=8, kv_block=512):
+    """Exact causal attention, super-row blocked.  q,k,v: (B,S,H,D), S==T."""
+    B, S, H, D = q.shape
+    n_super = max(1, min(n_super, S // max(1, kv_block)))
+    while S % n_super:
+        n_super -= 1
+    Sr = S // n_super
+    kb = math.gcd(Sr, kv_block)
+    outs = []
+    for s in range(n_super):
+        qs = jax.lax.slice_in_dim(q, s * Sr, (s + 1) * Sr, axis=1)
+        ks = jax.lax.slice_in_dim(k, 0, (s + 1) * Sr, axis=1)
+        vs = jax.lax.slice_in_dim(v, 0, (s + 1) * Sr, axis=1)
+        outs.append(_online_rows(qs, ks, vs, scale, kb, s * Sr, 0))
+    return jnp.concatenate(outs, axis=1)
+
+
+def bidir_attention(q, k, v, *, scale, kv_block=1024):
+    """Full bidirectional attention (encoder / cross)."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    if T <= 2 * kv_block or T % kv_block:
+        mask = jnp.ones((1, 1, S, T), bool)
+        return _dense_attn(q, k, v, mask, scale)
+    # online over kv blocks, no causal mask -> set rows high so mask passes
+    return _online_rows(q, k, v, scale, kv_block, q_start=T, k_start=0)
+
+
+def local_attention(q, k, v, *, scale, window, q_block=512):
+    """Banded causal attention: key ∈ (query - window, query]."""
+    B, S, H, D = q.shape
+    Dv = v.shape[-1]
+    qb = max(1, math.gcd(S, q_block))
+    nq = S // qb
+    W = window
+    kp = jnp.pad(k, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (W, 0), (0, 0), (0, 0)))
+
+    def row(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * qb, qb, axis=1)
+        ks = jax.lax.dynamic_slice_in_dim(kp, i * qb, W + qb, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(vp, i * qb, W + qb, axis=1)
+        r = jnp.arange(qb)[:, None]
+        j = jnp.arange(W + qb)[None, :]
+        valid = (j > r) & (j <= W + r) & (i * qb - W + j >= 0)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qs, ks,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(vs.dtype), vs,
+                       preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)
+
+    if nq == 1:
+        return row(0)
+    outs = jax.lax.map(row, jnp.arange(nq))  # (nq, B, qb, H, Dv)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, Dv)
+
+
+def decode_attention(q, k_cache, v_cache, mask, scale):
+    """q: (B, 1, H, D); cache: (B, T, H, D); mask: (B, T) or (T,) bool."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if mask.ndim == 1:
+        mask = mask[None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (params + cache)
+# ---------------------------------------------------------------------------
+
+def attn_descs(cfg: ModelConfig, cross: bool = False):
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    descs = {
+        "norm": L.norm_descs(cfg),
+        "wq": ParamDesc((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ParamDesc((d, Hkv, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDesc((d, Hkv, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDesc((H, Dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        descs["bq"] = ParamDesc((H, Dh), ("heads", "head_dim"), init="zeros")
+        descs["bk"] = ParamDesc((Hkv, Dh), ("kv_heads", "head_dim"), init="zeros")
+        descs["bv"] = ParamDesc((Hkv, Dh), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        descs["q_norm"] = ParamDesc((Dh,), ("head_dim",), init="ones")
+        descs["k_norm"] = ParamDesc((Dh,), ("head_dim",), init="ones")
+    return descs
+
+
+def attn_cache_descs(cfg: ModelConfig, batch: int, seq: int, window: int):
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if window > 0:
+        W = min(window, seq)
+        return {
+            "k": ParamDesc((batch, W, Hkv, Dh), ("batch", None, "kv_heads", None), dtype=cdt),
+            "v": ParamDesc((batch, W, Hkv, Dh), ("batch", None, "kv_heads", None), dtype=cdt),
+            "pos": ParamDesc((batch, W), ("batch", None), dtype=jnp.int32),
+        }
+    return {
+        "k": ParamDesc((batch, seq, Hkv, Dh), ("batch", "kv_seq", "kv_heads", None), dtype=cdt),
+        "v": ParamDesc((batch, seq, Hkv, Dh), ("batch", "kv_seq", "kv_heads", None), dtype=cdt),
+    }
+
+
+def _project_qkv(cfg: ModelConfig, p, x, kv_x=None):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    if cfg.qk_norm:
+        q = L.rms_head_norm(p["q_norm"], q)
+        k = L.rms_head_norm(p["k_norm"], k)
+    if cfg.cotangent_dtype:
+        # the f32 attention-score dots (preferred_element_type) would
+        # otherwise push f32 cotangents back through the projections
+        from repro.models.transformer import cotangent_cast
+        dt = jnp.dtype(cfg.cotangent_dtype)
+        q, k, v = (cotangent_cast(t, dt) for t in (q, k, v))
+    return q, k, v
+
+
+def _expand_kv(cfg: ModelConfig, k):
+    """Repeat kv heads to the q-head count and re-annotate sharding."""
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    if H != Hkv:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+    return constrain(k, ("batch", None, "heads", None))
+
+
+def apply_attn(cfg: ModelConfig, p, x, *, window: int, causal: bool = True,
+               mode: str = "train", cache=None, pos_t=None, enc_out=None,
+               cross: bool = False):
+    """Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    Dh = cfg.head_dim
+    scale = 1.0 / math.sqrt(Dh)
+    h = L.apply_norm(cfg, p["norm"], x)
+
+    if mode in ("train", "prefill"):
+        kv_src = enc_out if cross else None
+        q, k, v = _project_qkv(cfg, p, h, kv_src)
+        if not cross:
+            pos = jnp.arange(S)[None]
+            q = L.positions_for(cfg, q, pos) if cfg.pos_embed == "rope" else q
+            k = L.positions_for(cfg, k, pos) if cfg.pos_embed == "rope" else k
+        k_store, v_store = k, v
+        q = constrain(q, ("batch", None, "heads", None))
+        if cfg.use_pallas and not cross:
+            # TPU hot path: Pallas flash kernel (GQA handled by index maps)
+            from repro.kernels import ops as kops
+            o = kops.flash_attention(
+                jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                jnp.swapaxes(v, 1, 2), causal=causal, window=window,
+                scale=scale, block_q=cfg.attn_q_block,
+                block_k=min(cfg.attn_kv_block, cfg.attn_q_block))
+            o = jnp.swapaxes(o, 1, 2)
+        else:
+            ke, ve = _expand_kv(cfg, k), _expand_kv(cfg, v)
+            if cross or not causal:
+                o = bidir_attention(q, ke, ve, scale=scale,
+                                    kv_block=cfg.attn_kv_block)
+            elif window > 0:
+                o = local_attention(q, ke, ve, scale=scale, window=window,
+                                    q_block=cfg.attn_q_block)
+            else:
+                o = causal_attention(q, ke, ve, scale=scale,
+                                     kv_block=cfg.attn_kv_block)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+        new_cache = None
+        if mode == "prefill" and not cross:
+            if window > 0:
+                W = min(window, S)
+                new_cache = {
+                    "k": k_store[:, S - W:], "v": v_store[:, S - W:],
+                    "pos": jnp.broadcast_to(jnp.arange(S - W, S)[None], (B, W)),
+                }
+            else:
+                new_cache = {"k": k_store, "v": v_store}
+        elif mode == "prefill" and cross:
+            new_cache = {"k": k_store, "v": v_store}
+        return x + out, new_cache
+
+    # ---- decode: S == 1 ----
+    assert cache is not None
+    if cross:
+        ke = _expand_kv(cfg, cache["k"])
+        ve = _expand_kv(cfg, cache["v"])
+        q, _, _ = _project_qkv(cfg, p, h, h)  # k,v unused for cross decode
+        mask = jnp.ones((ke.shape[1],), bool)
+        o = decode_attention(q, ke, ve, mask, scale)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+        return x + out, cache
+
+    q, k, v = _project_qkv(cfg, p, h)
+    pos = jnp.full((B, 1), pos_t)
+    if cfg.pos_embed == "rope":
+        q = L.positions_for(cfg, q, pos)
+        k = L.positions_for(cfg, k, pos)
+    if window > 0:
+        W = cache["k"].shape[1]
+        slot = pos_t % W
+        k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        pos_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos.astype(jnp.int32), slot, axis=1)
+        mask = (pos_c >= 0) & (pos_c <= pos_t) & (pos_c > pos_t - window)
+        new_cache = {"k": k_c, "v": v_c, "pos": pos_c}
+    else:
+        k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos_t, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos_t, axis=1)
+        T = k_c.shape[1]
+        mask = jnp.arange(T)[None] <= pos_t
+        new_cache = {"k": k_c, "v": v_c}
+    ke, ve = _expand_kv(cfg, k_c), _expand_kv(cfg, v_c)
+    o = decode_attention(q, ke, ve, mask, scale)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_descs(cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    ql, kl = cfg.mla_q_lora, cfg.mla_kv_lora
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    return {
+        "norm": L.norm_descs(cfg),
+        "wq_a": ParamDesc((d, ql), ("embed", "lora")),
+        "q_norm": ParamDesc((ql,), ("lora",), init="ones"),
+        "wq_b": ParamDesc((ql, H, dn + dr), ("lora", "heads", "head_dim")),
+        "wkv_a": ParamDesc((d, kl + dr), ("embed", "lora")),
+        "kv_norm": ParamDesc((kl,), ("lora",), init="ones"),
+        "wk_b": ParamDesc((kl, H, dn), ("lora", "heads", "head_dim")),
+        "wv_b": ParamDesc((kl, H, dv), ("lora", "heads", "head_dim")),
+        "wo": ParamDesc((H, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_cache_descs(cfg: ModelConfig, batch: int, seq: int):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "c_kv": ParamDesc((batch, seq, cfg.mla_kv_lora), ("batch", "kv_seq", None), dtype=cdt),
+        "k_rope": ParamDesc((batch, seq, cfg.mla_rope_dim), ("batch", "kv_seq", None), dtype=cdt),
+    }
+
+
+def _mla_common(cfg: ModelConfig, p, h, positions):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    dn, dr = cfg.mla_nope_dim, cfg.mla_rope_dim
+    kl = cfg.mla_kv_lora
+    cq = jnp.einsum("bsd,dl->bsl", h, p["wq_a"].astype(cdt))
+    # low-rank RMS norms (fp32 internally)
+    cq = cq * jax.lax.rsqrt(jnp.mean(jnp.square(cq.astype(jnp.float32)), -1,
+                                     keepdims=True) + 1e-6).astype(cdt)
+    cq = cq * p["q_norm"].astype(cdt)
+    qf = jnp.einsum("bsl,lhk->bshk", cq, p["wq_b"].astype(cdt))
+    q_nope, q_rope = qf[..., :dn], qf[..., dn:]
+    q_rope = L.apply_rope(cfg, q_rope, positions)
+    ckv_f = jnp.einsum("bsd,dl->bsl", h, p["wkv_a"].astype(cdt))
+    c_kv, k_rope = ckv_f[..., :kl], ckv_f[..., kl:]
+    c_kv = c_kv * jax.lax.rsqrt(jnp.mean(jnp.square(c_kv.astype(jnp.float32)),
+                                         -1, keepdims=True) + 1e-6).astype(cdt)
+    c_kv = c_kv * p["kv_norm"].astype(cdt)
+    k_rope = L.apply_rope(cfg, k_rope[:, :, None, :], positions)[:, :, 0]
+    q_nope = constrain(q_nope, ("batch", None, "heads", None))
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def apply_mla(cfg: ModelConfig, p, x, *, mode="train", cache=None, pos_t=None):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+    h = L.apply_norm(cfg, p["norm"], x)
+
+    if mode in ("train", "prefill"):
+        pos = jnp.arange(S)[None]
+        q_nope, q_rope, c_kv, k_rope = _mla_common(cfg, p, h, pos)
+        k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["wk_b"].astype(cdt))
+        v = jnp.einsum("bsl,lhk->bshk", c_kv, p["wv_b"].astype(cdt))
+        k_nope = constrain(k_nope, ("batch", None, "heads", None))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, cfg.n_heads, dr))], axis=-1)
+        o = causal_attention(q, k, v, scale=scale, kv_block=cfg.attn_kv_block)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope} if mode == "prefill" else None
+        return x + out, new_cache
+
+    # ---- absorbed decode ----
+    assert cache is not None
+    pos = jnp.full((B, 1), pos_t)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_common(cfg, p, h, pos)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv_new, pos_t, axis=1)
+    krp = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope_new, pos_t, axis=1)
+    T = ckv.shape[1]
+    # absorb W_k into q:  q_eff (B,S,H,L)
+    q_eff = jnp.einsum("bshk,lhk->bshl", q_nope, p["wk_b"].astype(cdt))
+    s = (jnp.einsum("bshl,btl->bhst", q_eff, ckv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshr,btr->bhst", q_rope, krp,
+                      preferred_element_type=jnp.float32)) * scale
+    mask = jnp.arange(T)[None, None, None, :] <= pos_t
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhst,btl->bshl", w.astype(cdt), ckv,
+                     preferred_element_type=jnp.float32).astype(cdt)
+    o = jnp.einsum("bshl,lhk->bshk", o_c, p["wv_b"].astype(cdt))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cdt))
+    return x + out, {"c_kv": ckv, "k_rope": krp}

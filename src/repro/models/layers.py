@@ -1,0 +1,187 @@
+"""Shared model primitives: norms, FFN, embeddings, rotary / sinusoidal positions."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDesc
+
+
+# ---------------------------------------------------------------------------
+# activations / norms
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def norm_descs(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    out = {"scale": ParamDesc((d,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        out["bias"] = ParamDesc((d,), ("embed",), init="zeros")
+    return out
+
+
+def apply_norm(cfg: ModelConfig, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """Per-head qk-norm (gemma3): normalize the last (head_dim) axis."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+
+def ffn_descs(cfg: ModelConfig, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    descs = {
+        "norm": norm_descs(cfg),
+        "w1": ParamDesc((d, ff), ("embed", "ff")),
+        "w2": ParamDesc((ff, d), ("ff", "embed")),
+    }
+    if cfg.gated_ffn:
+        descs["w3"] = ParamDesc((d, ff), ("embed", "ff"))
+    else:
+        descs["b1"] = ParamDesc((ff,), ("ff",), init="zeros")
+        descs["b2"] = ParamDesc((d,), ("embed",), init="zeros")
+    return descs
+
+
+def apply_ffn(cfg: ModelConfig, p, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = apply_norm(cfg, p["norm"], x)
+    act = act_fn(cfg.act)
+    if cfg.gated_ffn:
+        g = jnp.einsum("bsd,df->bsf", h, p["w1"].astype(cdt))
+        u = jnp.einsum("bsd,df->bsf", h, p["w3"].astype(cdt))
+        z = act(g) * u
+        out = jnp.einsum("bsf,fd->bsd", z, p["w2"].astype(cdt))
+    else:
+        z = act(jnp.einsum("bsd,df->bsf", h, p["w1"].astype(cdt)) + p["b1"].astype(cdt))
+        out = jnp.einsum("bsf,fd->bsd", z, p["w2"].astype(cdt)) + p["b2"].astype(cdt)
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_descs(cfg: ModelConfig):
+    descs = {"embed": {"table": ParamDesc((cfg.vocab_padded, cfg.d_model),
+                                          ("vocab", "embed"), scale=0.02)}}
+    if not cfg.tie_embeddings:
+        descs["unembed"] = {"table": ParamDesc((cfg.vocab_padded, cfg.d_model),
+                                               ("vocab", "embed"), scale=0.02)}
+    return descs
+
+
+def apply_embed(cfg: ModelConfig, params, tokens):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    table = params["embed"]["table"]
+    x = jnp.take(table, tokens, axis=0).astype(cdt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cdt)
+    return x
+
+
+def unembed_table(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"]
+    return params["unembed"]["table"]
+
+
+# ---------------------------------------------------------------------------
+# positions: RoPE / M-RoPE / sinusoidal
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, rot_dim: int):
+    half = rot_dim // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return inv  # (half,)
+
+
+def apply_rope(cfg: ModelConfig, x, positions, rot_dim: int | None = None):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    rot = rot_dim or D
+    half = rot // 2
+    inv = rope_freqs(cfg, rot)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:rot]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([xr1, xr2], axis=-1)
+    if rot < D:
+        out = jnp.concatenate([out, x[..., rot:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(cfg: ModelConfig, x, positions):
+    """Qwen2-VL M-RoPE: head_dim/2 frequency slots split into (t, h, w) sections.
+
+    For pure-text streams the three position ids coincide (the VLM frontend is
+    a stub per the assignment); the section structure is still exercised.
+    positions: (..., S) or (..., 3, S).
+    """
+    D = x.shape[-1]
+    half = D // 2
+    sections = cfg.mrope_sections
+    assert sum(sections) == half, (sections, half)
+    if positions.ndim == x.ndim - 2:  # (..., S) -> same pos for all sections
+        pos3 = jnp.stack([positions] * 3, axis=-2)
+    else:
+        pos3 = positions
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # choose section s for each frequency slot
+    sec_id = jnp.concatenate([
+        jnp.full((n,), i, dtype=jnp.int32) for i, n in enumerate(sections)
+    ])  # (half,)
+    # pos3: (..., 3, S) -> (..., S, 3); each freq slot picks one of the 3 ids
+    p = jnp.moveaxis(pos3, -2, -1)  # (..., S, 3)
+    pos_slot = jnp.take(p, sec_id, axis=-1)  # (..., S, half)
+    ang = pos_slot.astype(jnp.float32) * inv  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos, sin = cos[..., None, :], sin[..., None, :]  # broadcast heads
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_pos(d_model: int, positions):
+    """Whisper-style sinusoids: positions (...,) -> (..., d_model), fp32."""
+    half = d_model // 2
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                  * (math.log(10000.0) / max(1, half - 1)))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def positions_for(cfg: ModelConfig, q, pos):
+    """Apply the configured positional scheme to q/k tensors (..., S, H, D)."""
+    if cfg.mrope_sections:
+        return apply_mrope(cfg, q, pos)
+    return apply_rope(cfg, q, pos)

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2 / Granite style).
+
+Scatter-based dispatch (no GShard one-hot dispatch einsum): tokens are
+scatter-added into per-expert capacity slots and gathered back, so dispatch
+costs O(tokens·d) data movement and zero matmul FLOPs.
+
+Grouping/sharding layout: the *batch* dim is the parallel group axis (it is
+the data-sharded dim, so each data shard routes its own tokens — GShard's
+"groups == shards" layout); the sequence dim is scanned in chunks of
+``moe.group_size`` to bound the expert-space buffer working set.  Expert
+weights carry an ("experts" -> data) sharding in the default rules, giving
+expert-parallelism over the data axis: the `constrain` on the dispatched
+buffer makes XLA redistribute *activations* (all-to-all-shaped), never the
+expert weights.  Capacity follows GShard (c = g·k/E·capacity_factor), k-slot-
+major priority; top-k gate weights are renormalized (DeepSeek-style); shared
+experts are an always-on dense GLU branch.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamDesc
+from repro.models import layers as L
+
+
+def moe_descs(cfg: ModelConfig):
+    m = cfg.moe
+    d, E, eff = cfg.d_model, m.n_experts, m.expert_ff
+    descs = {
+        "norm": L.norm_descs(cfg),
+        "router": ParamDesc((d, E), ("embed", "experts"), dtype=jnp.float32),
+        "w1": ParamDesc((E, d, eff), ("experts", "embed", "expert_ff")),
+        "w3": ParamDesc((E, d, eff), ("experts", "embed", "expert_ff")),
+        "w2": ParamDesc((E, eff, d), ("experts", "expert_ff", "embed")),
+    }
+    if m.n_shared:
+        sff = m.n_shared * eff
+        descs["shared"] = {
+            "w1": ParamDesc((d, sff), ("embed", "ff")),
+            "w3": ParamDesc((d, sff), ("embed", "ff")),
+            "w2": ParamDesc((sff, d), ("ff", "embed")),
+        }
+    return descs
+
+
+def _capacity(g: int, k: int, E: int, factor: float) -> int:
+    c = int(math.ceil(g * k / E * factor))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def _route_chunk(cfg: ModelConfig, p, h):
+    """h: (B, t, d) one sequence chunk -> (y, aux_loss)."""
+    m = cfg.moe
+    E, K = m.n_experts, m.top_k
+    B, t, d = h.shape
+    c = _capacity(t, K, E, m.capacity_factor)
+    cdt = h.dtype
+
+    logits = jnp.einsum("btd,de->bte", h.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B, t, E)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)                   # (B, t, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * P_e   (per group)
+    f = jax.vmap(lambda idx: jnp.zeros((E,), jnp.float32)
+                 .at[idx.reshape(-1)].add(1.0))(gate_idx) / (t * K)
+    P_e = probs.mean(axis=1)
+    aux = (E * jnp.sum(f * P_e, axis=-1)).mean()
+
+    # position-in-expert, k-slot-major priority (GShard)
+    idx_km = jnp.swapaxes(gate_idx, 1, 2).reshape(B, K * t)      # k-major
+    oh = jax.nn.one_hot(idx_km, E, dtype=jnp.int32)              # (B, K*t, E)
+    pos = jnp.cumsum(oh, axis=1) - 1
+    pos_of = jnp.sum(pos * oh, axis=-1).reshape(B, K, t)
+    eid = jnp.swapaxes(gate_idx, 1, 2)                           # (B, K, t)
+    keep = pos_of < c
+
+    if m.dispatch == "index":
+        # index-indirection dispatch: scatter ONLY the int32 slot->token map
+        # (negligible bytes), then gather the token data.  The (B, E*c, d)
+        # expert buffer is produced by a gather, never by a partial-sum
+        # scatter-add that GSPMD would replicate + all-reduce.
+        h_pad = jnp.concatenate([h, jnp.zeros((B, 1, d), cdt)], axis=1)
+        tok = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None, None],
+                               (B, K, t))
+        inv = jnp.full((B, E * c + 1), t, jnp.int32)
+
+        def set_one(inv_b, slot_b, tok_b):
+            return inv_b.at[slot_b].set(tok_b)
+
+        for k in range(K):
+            slot = jnp.where(keep[:, k], eid[:, k] * c + pos_of[:, k], E * c)
+            inv = jax.vmap(set_one)(inv, slot, tok[:, k])
+        xe = jnp.take_along_axis(h_pad, inv[:, : E * c, None], axis=1)
+        xe = xe.reshape(B, E, c, d)
+    else:
+        def scatter_one(xs_b, slot_b, h_b):
+            return xs_b.at[slot_b].add(h_b)
+
+        xs = jnp.zeros((B, E * c + 1, d), cdt)
+        for k in range(K):
+            slot = jnp.where(keep[:, k], eid[:, k] * c + pos_of[:, k], E * c)
+            xs = jax.vmap(scatter_one)(xs, slot, h)
+        xe = xs[:, : E * c].reshape(B, E, c, d)
+    xe = constrain(xe, ("batch", "experts", None, None))
+
+    act = L.act_fn(cfg.act)
+    g1 = jnp.einsum("becd,edf->becf", xe, p["w1"].astype(cdt))
+    u1 = jnp.einsum("becd,edf->becf", xe, p["w3"].astype(cdt))
+    ye = jnp.einsum("becf,efd->becd", act(g1) * u1, p["w2"].astype(cdt))
+    ye = constrain(ye, ("batch", "experts", None, None))
+    yf = jnp.concatenate(
+        [ye.reshape(B, E * c, d), jnp.zeros((B, 1, d), cdt)], axis=1)
+
+    y = jnp.zeros((B, t, d), cdt)
+    for k in range(K):
+        slot = jnp.where(keep[:, k], eid[:, k] * c + pos_of[:, k], E * c)
+        gathered = jax.vmap(lambda yf_b, s_b: jnp.take(yf_b, s_b, axis=0))(yf, slot)
+        y = y + gate_w[:, :, k, None].astype(cdt) * gathered
+    return y, aux
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (x + moe_out, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    h = L.apply_norm(cfg, p["norm"], x)
+    g = min(m.group_size, S)
+    while S % g:
+        g -= 1
+    ns = S // g
+
+    if ns == 1:
+        y, aux = _route_chunk(cfg, p, h)
+    else:
+        hg = jnp.moveaxis(h.reshape(B, ns, g, d), 1, 0)  # (ns, B, g, d)
+
+        def body(_, h_c):
+            return (), _route_chunk(cfg, p, h_c)
+
+        _, (yg, auxs) = jax.lax.scan(body, (), hg)
+        y = jnp.moveaxis(yg, 0, 1).reshape(B, S, d)
+        aux = auxs.mean()
+    out = y.reshape(B, S, d)
+
+    if m.n_shared:
+        sp = p["shared"]
+        cdt = h.dtype
+        act = L.act_fn(cfg.act)
+        z = act(jnp.einsum("bsd,df->bsf", h, sp["w1"].astype(cdt))) * \
+            jnp.einsum("bsd,df->bsf", h, sp["w3"].astype(cdt))
+        out = out + jnp.einsum("bsf,fd->bsd", z, sp["w2"].astype(cdt))
+    return x + out, aux * m.aux_loss_weight

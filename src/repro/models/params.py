@@ -1,0 +1,180 @@
+"""Parameter descriptor system.
+
+A model is described by a pytree (nested dicts) of `ParamDesc` leaves.  The
+same tree is the single source of truth for
+
+  * initialization         (`init_tree`)
+  * sharding PartitionSpecs (`spec_tree`)
+  * abstract shapes         (`shape_tree`)
+
+Logical axis names on each parameter dim map to mesh axes through a rules
+dict (e.g. ``{"ff": "model", "vocab": "model", "batch": ("pod", "data")}``).
+A logical axis is only sharded when the dimension size is divisible by the
+product of the mesh axis sizes it maps to; otherwise it silently falls back
+to replication (this is what makes e.g. 28-head models lower on a 16-way
+model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]  # logical axis name (str) or None, per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | lru_a
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_desc(x) -> bool:
+    return isinstance(x, ParamDesc)
+
+
+def tree_map_desc(fn: Callable[[ParamDesc], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_desc)
+
+
+def stack_desc(tree, n: int, axis_name: str | None = "layers"):
+    """Add a leading stacking dim (for scan-over-layers parameter stacking)."""
+
+    def f(d: ParamDesc) -> ParamDesc:
+        return dataclasses.replace(d, shape=(n,) + d.shape, axes=(axis_name,) + d.axes)
+
+    return tree_map_desc(f, tree)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    if len(shape) == 0:
+        return 1
+    if len(shape) == 1:
+        return shape[0]
+    # last dim is the output dim by convention here
+    return max(1, math.prod(shape[:-1]))
+
+
+def init_tree(tree, key, param_dtype=jnp.float32):
+    """Materialize parameters from descriptors."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_desc)
+    keys = jax.random.split(key, max(1, len(leaves)))
+
+    def init_one(d: ParamDesc, k):
+        dtype = d.dtype if d.dtype is not None else param_dtype
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "lru_a":
+            # RG-LRU / LRU "Lambda" parameter: softplus-inverse of a in (0.9, 0.999)
+            u = jax.random.uniform(k, d.shape, jnp.float32, 0.9, 0.999)
+            # a = sigmoid(L) ** (c * r); init L so sigmoid(L)=u^(1/c) with c=8
+            val = jnp.log(u ** (1.0 / 8.0) / (1 - u ** (1.0 / 8.0)))
+            return val.astype(dtype)
+        scale = d.scale if d.scale is not None else 1.0 / math.sqrt(_fan_in(d.shape))
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [init_one(d, k) for d, k in zip(leaves, keys)]
+    )
+
+
+def _axis_size(mesh_shape: dict[str, int], mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        return mesh_shape.get(mesh_axes, 1)
+    return math.prod(mesh_shape.get(a, 1) for a in mesh_axes)
+
+
+def resolve_spec(d: ParamDesc, rules: dict[str, Any], mesh_shape: dict[str, int]) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    parts = []
+    used: set = set()
+
+    def flat(ax):
+        return (ax,) if isinstance(ax, str) else tuple(ax)
+
+    for dim, ax in zip(d.shape, d.axes):
+        mapped = rules.get(ax) if ax is not None else None
+        if mapped is None:
+            parts.append(None)
+            continue
+        size = _axis_size(mesh_shape, mapped)
+        names = flat(mapped)
+        if size <= 1 or dim % size != 0 or any(n in used for n in names):
+            parts.append(None)
+            continue
+        used.update(names)
+        parts.append(mapped)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def spec_tree(tree, rules: dict[str, Any], mesh: Mesh):
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return tree_map_desc(lambda d: resolve_spec(d, rules, mesh_shape), tree)
+
+
+def sharding_tree(tree, rules: dict[str, Any], mesh: Mesh):
+    specs = spec_tree(tree, rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def shape_tree(tree, param_dtype=jnp.float32):
+    return tree_map_desc(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or param_dtype), tree
+    )
+
+
+def count_params(tree) -> int:
+    return sum(math.prod(d.shape) for d in jax.tree_util.tree_leaves(
+        tree_map_desc(lambda d: d, tree), is_leaf=is_desc) if is_desc(d))
+
+
+# ---------------------------------------------------------------------------
+# Default logical-axis -> mesh-axis rules
+# ---------------------------------------------------------------------------
+
+def default_rules(multi_pod: bool = False, *, shard_layers_over_data: bool = False,
+                  seq_axis: bool = False) -> dict[str, Any]:
+    """Baseline tensor-parallel rules.
+
+    batch      -> data (and pod) axes  (pure DP)
+    vocab/ff/heads/inner/rnn -> model axis (TP)
+    layers     -> optionally data (ZeRO-3-style param sharding; hillclimb lever)
+    seq        -> data (sequence-parallel KV cache for batch=1 long context)
+    """
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    rules: dict[str, Any] = {
+        "batch": data_axes if len(data_axes) > 1 else data_axes[0],
+        "vocab": "model",
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "experts": "data",        # expert-parallel over the data axis
+        "expert_ff": "model",     # + TP inside experts
+        "inner": "model",         # mamba d_inner
+        "rnn": "model",           # rg-lru width
+        "state": None,
+        "lora": None,
+        "layers": data_axes[-1] if shard_layers_over_data else None,
+        "kv_seq": data_axes[-1] if seq_axis else None,
+        "seq_act": None,          # activation sequence sharding (train/prefill)
+        "frames": None,
+    }
+    return rules

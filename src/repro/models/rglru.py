@@ -1,0 +1,146 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block.
+
+Block: x -> (gate branch: GeLU(x·W_gate)) ⊙ RG-LRU(conv1d(x·W_in)) -> W_out.
+RG-LRU: r_t = σ(u·W_a), i_t = σ(u·W_x), a_t = a^(c·r_t) with a = σ(Λ),
+        h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t).
+
+Same chunked-linear-recurrence evaluation as the Mamba block (state is
+(B, lru_width), no d_state expansion).  `repro.kernels.rglru_scan` is the
+Pallas/TPU tiling of the inner recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamDesc
+from repro.models import layers as L
+from repro.models.ssm import _causal_conv
+
+
+def rglru_descs(cfg: ModelConfig):
+    r = cfg.rglru
+    d = cfg.d_model
+    w = r.lru_width or d
+    K = r.d_conv
+    return {
+        "norm": L.norm_descs(cfg),
+        "in_x": ParamDesc((d, w), ("embed", "rnn")),
+        "in_gate": ParamDesc((d, w), ("embed", "rnn")),
+        "conv_w": ParamDesc((K, w), (None, "rnn")),
+        "conv_b": ParamDesc((w,), ("rnn",), init="zeros"),
+        "gate_a": ParamDesc((w, w), ("rnn", None)),
+        "gate_x": ParamDesc((w, w), ("rnn", None)),
+        "a_param": ParamDesc((w,), ("rnn",), init="lru_a"),
+        "out_proj": ParamDesc((w, d), ("rnn", "embed")),
+    }
+
+
+def rglru_cache_descs(cfg: ModelConfig, batch: int):
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    return {
+        "state": ParamDesc((batch, w), ("batch", "rnn"), dtype=jnp.float32),
+        "conv": ParamDesc((batch, r.d_conv - 1, w), ("batch", None, "rnn"),
+                          dtype=jnp.dtype(cfg.compute_dtype)),
+    }
+
+
+def rglru_scan(u, a_gate, x_gate, a_param, *, c: float, chunk: int, h0=None):
+    """u, a_gate, x_gate: (B, S, W) — returns (y, h_final), fp32 recurrence."""
+    B, S, W = u.shape
+    log_a = -c * jax.nn.softplus(-a_param.astype(jnp.float32))  # log σ(Λ) scaled
+    # a_t = exp(log_a * r_t)
+    r = jax.nn.sigmoid(a_gate.astype(jnp.float32))
+    i = jax.nn.sigmoid(x_gate.astype(jnp.float32))
+    log_at = log_a[None, None] * r                  # (B,S,W)
+    at = jnp.exp(log_at)
+    bt = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+
+    nc = max(1, S // chunk)
+    while S % nc:
+        nc -= 1
+    ch = S // nc
+    h0 = jnp.zeros((B, W), jnp.float32) if h0 is None else h0
+    ac = jnp.moveaxis(at.reshape(B, nc, ch, W), 1, 0)
+    bc = jnp.moveaxis(bt.reshape(B, nc, ch, W), 1, 0)
+
+    def chunk_step(h, xs):
+        a_, b_ = xs
+
+        def combine(p, q):
+            a1, b1 = p
+            a2, b2 = q
+            return a1 * a2, a2 * b1 + b2
+
+        accA, accB = jax.lax.associative_scan(combine, (a_, b_), axis=1)
+        hs = accA * h[:, None] + accB
+        return hs[:, -1], hs
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (ac, bc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, W)
+    return y, h_fin
+
+
+def apply_rglru(cfg: ModelConfig, p, x, *, mode="train", cache=None, pos_t=None):
+    r = cfg.rglru
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    w = r.lru_width or d
+    h = L.apply_norm(cfg, p["norm"], x)
+
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, p["in_gate"].astype(cdt)),
+                       approximate=True)
+    u = jnp.einsum("bsd,dw->bsw", h, p["in_x"].astype(cdt))
+    u = constrain(u, ("batch", None, "rnn"))
+
+    if mode in ("train", "prefill"):
+        uc, tail = _causal_conv(u, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))
+        a_gate = jnp.einsum("bsw,wv->bsv", uc, p["gate_a"].astype(cdt))
+        x_gate = jnp.einsum("bsw,wv->bsv", uc, p["gate_x"].astype(cdt))
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            log_a = -r.c * jax.nn.softplus(-p["a_param"].astype(jnp.float32))
+            rg = jax.nn.sigmoid(a_gate.astype(jnp.float32))
+            ig = jax.nn.sigmoid(x_gate.astype(jnp.float32))
+            log_at = log_a[None, None] * rg
+            at = jnp.exp(log_at)
+            bt = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12)) \
+                * (ig * uc.astype(jnp.float32))
+            h0 = jnp.zeros((B, w), jnp.float32)
+            y, h_fin = kops.rglru_scan(at, bt, h0, chunk=r.chunk)
+        else:
+            y, h_fin = rglru_scan(uc, a_gate, x_gate, p["a_param"],
+                                  c=r.c, chunk=r.chunk)
+        out = jnp.einsum("bsw,wd->bsd", y.astype(cdt) * gate,
+                         p["out_proj"].astype(cdt))
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"state": h_fin,
+                         "conv": tail if tail is not None else
+                         jnp.zeros((B, r.d_conv - 1, w), cdt)}
+        return x + out, new_cache
+
+    # ---- decode ----
+    assert cache is not None
+    tail = cache["conv"]
+    win = jnp.concatenate([tail.astype(cdt), u], axis=1)       # (B, K, w)
+    uc = jnp.einsum("bkw,kw->bw", win, p["conv_w"].astype(cdt)) \
+        + p["conv_b"].astype(cdt)
+    a_gate = jnp.einsum("bw,wv->bv", uc, p["gate_a"].astype(cdt))
+    x_gate = jnp.einsum("bw,wv->bv", uc, p["gate_x"].astype(cdt))
+    log_a = -r.c * jax.nn.softplus(-p["a_param"].astype(jnp.float32))
+    rg = jax.nn.sigmoid(a_gate.astype(jnp.float32))
+    ig = jax.nn.sigmoid(x_gate.astype(jnp.float32))
+    log_at = log_a[None] * rg
+    at = jnp.exp(log_at)
+    bt = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12)) \
+        * (ig * uc.astype(jnp.float32))
+    h_new = at * cache["state"] + bt
+    out = jnp.einsum("bw,wd->bd", h_new.astype(cdt) * gate[:, 0],
+                     p["out_proj"].astype(cdt))[:, None]
+    new_tail = jnp.concatenate([tail[:, 1:], u.astype(tail.dtype)], axis=1)
+    return x + out, {"state": h_new, "conv": new_tail}

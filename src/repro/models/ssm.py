@@ -1,0 +1,164 @@
+"""Mamba-1 selective-state-space block (falcon-mamba-7b).
+
+The selective scan h_t = exp(Δ_t A)·h_{t-1} + Δ_t·B_t·x_t is evaluated as a
+*chunked* linear recurrence: `lax.scan` over time chunks carrying the state,
+with a log-depth `associative_scan` inside each chunk — the (chunk, D, N)
+intermediate is the only expanded tensor, so the working set is
+O(chunk·d_inner·d_state) instead of O(seq·d_inner·d_state).
+`repro.kernels.mamba_scan` is the Pallas/TPU tiling of the same math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamDesc
+from repro.models import layers as L
+
+
+def mamba_descs(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.expand * d
+    dtr = s.dt_rank or -(-d // 16)
+    N, K = s.d_state, s.d_conv
+    return {
+        "norm": L.norm_descs(cfg),
+        "in_proj": ParamDesc((d, 2 * din), ("embed", "inner")),
+        "conv_w": ParamDesc((K, din), (None, "inner")),
+        "conv_b": ParamDesc((din,), ("inner",), init="zeros"),
+        "x_proj": ParamDesc((din, dtr + 2 * N), ("inner", None)),
+        "dt_proj": ParamDesc((dtr, din), (None, "inner")),
+        "dt_bias": ParamDesc((din,), ("inner",), init="zeros"),
+        "A_log": ParamDesc((din, N), ("inner", "state"), init="ones"),
+        "D": ParamDesc((din,), ("inner",), init="ones"),
+        "out_proj": ParamDesc((din, d), ("inner", "embed")),
+    }
+
+
+def mamba_cache_descs(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    return {
+        "state": ParamDesc((batch, din, s.d_state), ("batch", "inner", None),
+                           dtype=jnp.float32),
+        "conv": ParamDesc((batch, s.d_conv - 1, din), ("batch", None, "inner"),
+                          dtype=jnp.dtype(cfg.compute_dtype)),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """x: (B, S, D); w: (K, D) depthwise causal conv; tail: (B, K-1, D)."""
+    K = w.shape[0]
+    pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype) if tail is None \
+        else tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    return out + b[None, None], xp[:, -(K - 1):] if K > 1 else None
+
+
+def selective_scan(u, dt, A, Bm, Cm, *, chunk: int, h0=None):
+    """u, dt: (B, S, D); A: (D, N); Bm, Cm: (B, S, N).  Returns (y, h_final).
+
+    y_t = C_t · h_t,  h_t = exp(dt_t·A)·h_{t-1} + dt_t·B_t·u_t
+    """
+    B, S, D = u.shape
+    N = A.shape[1]
+    nc = max(1, S // chunk)
+    while S % nc:
+        nc -= 1
+    ch = S // nc
+    h0 = jnp.zeros((B, D, N), jnp.float32) if h0 is None else h0
+
+    uc = u.reshape(B, nc, ch, D)
+    dtc = dt.reshape(B, nc, ch, D)
+    Bc = Bm.reshape(B, nc, ch, N)
+    Cc = Cm.reshape(B, nc, ch, N)
+
+    def chunk_step(h, xs):
+        u_, dt_, B_, C_ = xs  # (B, ch, D), (B, ch, D), (B, ch, N), (B, ch, N)
+        dA = jnp.exp(dt_.astype(jnp.float32)[..., None] * A[None, None])  # (B,ch,D,N)
+        dBu = (dt_.astype(jnp.float32) * u_.astype(jnp.float32))[..., None] \
+            * B_.astype(jnp.float32)[..., None, :]                         # (B,ch,D,N)
+
+        def combine(a, b):
+            a1, b1 = a
+            a2, b2 = b
+            return a1 * a2, a2 * b1 + b2
+
+        accA, accB = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+        hs = accA * h[:, None] + accB                                      # (B,ch,D,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, C_.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h_fin, ys = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(uc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+    return y, h_fin
+
+
+def apply_mamba(cfg: ModelConfig, p, x, *, mode="train", cache=None, pos_t=None):
+    """Returns (out, new_cache)."""
+    s = cfg.ssm
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    din = s.expand * d
+    dtr = s.dt_rank or -(-d // 16)
+    N = s.d_state
+    h = L.apply_norm(cfg, p["norm"], x)
+
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(cdt))
+    xz = constrain(xz, ("batch", None, "inner"))
+    xin, z = xz[..., :din], xz[..., din:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if mode in ("train", "prefill"):
+        conv_tail = None
+        xc, tail = _causal_conv(xin, p["conv_w"].astype(cdt),
+                                p["conv_b"].astype(cdt))
+        xc = jax.nn.silu(xc)
+        proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"].astype(cdt))
+        dt_r, Bm, Cm = proj[..., :dtr], proj[..., dtr:dtr + N], proj[..., dtr + N:]
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"].astype(cdt))
+            + p["dt_bias"].astype(cdt))
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            y, h_fin = kops.mamba_scan(xc, dt, A, Bm, Cm, chunk=s.chunk)
+        else:
+            y, h_fin = selective_scan(xc, dt, A, Bm, Cm, chunk=s.chunk)
+        y = y.astype(cdt) + xc * p["D"].astype(cdt)
+        out = jnp.einsum("bsd,de->bse", y * jax.nn.silu(z),
+                         p["out_proj"].astype(cdt))
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"state": h_fin, "conv": tail if tail is not None else
+                         jnp.zeros((B, s.d_conv - 1, din), cdt)}
+        return x + out, new_cache
+
+    # ---- decode: single step ----
+    assert cache is not None
+    tail = cache["conv"]  # (B, K-1, din)
+    window = jnp.concatenate([tail.astype(cdt), xin], axis=1)  # (B, K, din)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(cdt)) \
+        + p["conv_b"].astype(cdt)
+    xc = jax.nn.silu(xc)[:, None]  # (B, 1, din)
+    proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"].astype(cdt))
+    dt_r, Bm, Cm = proj[..., :dtr], proj[..., dtr:dtr + N], proj[..., dtr + N:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"].astype(cdt))
+        + p["dt_bias"].astype(cdt))
+    dA = jnp.exp(dt.astype(jnp.float32)[:, 0, :, None] * A[None])  # (B, D, N)
+    dBu = (dt.astype(jnp.float32) * xc.astype(jnp.float32))[:, 0, :, None] \
+        * Bm.astype(jnp.float32)[:, 0, None, :]               # (B, D, N)
+    h_new = dA * cache["state"] + dBu
+    y = jnp.einsum("bdn,bn->bd", h_new, Cm.astype(jnp.float32)[:, 0])[:, None]
+    y = y.astype(cdt) + xc * p["D"].astype(cdt)
+    out = jnp.einsum("bsd,de->bse", y * jax.nn.silu(z),
+                     p["out_proj"].astype(cdt))
+    new_tail = jnp.concatenate([tail[:, 1:], xin.astype(tail.dtype)], axis=1)
+    return x + out, {"state": h_new, "conv": new_tail}

@@ -1,0 +1,364 @@
+"""Model assembly: layer-pattern scan, train/prefill/decode entry points.
+
+The layer stack is a sequence of (pattern, repeats) groups (see
+`ModelConfig.blocks`).  Each group's parameters are stacked along a leading
+dim and the group body (the unrolled pattern, <= 6 layers) is `lax.scan`ned —
+one compiled block per group regardless of depth.  The body is `jax.checkpoint`ed
+for training (configurable policy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.params import ParamDesc, stack_desc
+
+ENC_SPEC = LayerSpec(mixer="attn", window=0, ffn="dense", causal=False)
+
+
+# ---------------------------------------------------------------------------
+# descriptors
+# ---------------------------------------------------------------------------
+
+def layer_descs(cfg: ModelConfig, spec: LayerSpec):
+    d: dict[str, Any] = {}
+    if spec.mixer == "attn":
+        d["mixer"] = A.attn_descs(cfg)
+    elif spec.mixer == "mla":
+        d["mixer"] = A.mla_descs(cfg)
+    elif spec.mixer == "mamba":
+        d["mixer"] = S.mamba_descs(cfg)
+    elif spec.mixer == "rglru":
+        d["mixer"] = R.rglru_descs(cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        d["cross"] = A.attn_descs(cfg, cross=True)
+    if spec.ffn == "dense":
+        d["ffn"] = L.ffn_descs(cfg)
+    elif spec.ffn == "moe":
+        d["moe"] = M.moe_descs(cfg)
+    return d
+
+
+def build_descriptors(cfg: ModelConfig):
+    descs: dict[str, Any] = dict(L.embed_descs(cfg))
+    descs["final_norm"] = L.norm_descs(cfg)
+    descs["blocks"] = [
+        stack_desc({f"l{i}": layer_descs(cfg, s) for i, s in enumerate(pattern)},
+                   reps)
+        for pattern, reps in cfg.blocks
+    ]
+    if cfg.enc_dec:
+        descs["encoder"] = {
+            "blocks": [stack_desc({"l0": layer_descs(cfg, ENC_SPEC)},
+                                  cfg.n_enc_layers)],
+            "final_norm": L.norm_descs(cfg),
+        }
+    return descs
+
+
+def layer_cache_descs(cfg: ModelConfig, spec: LayerSpec, batch: int, seq: int):
+    d: dict[str, Any] = {}
+    if spec.mixer == "attn":
+        d["mixer"] = A.attn_cache_descs(cfg, batch, seq, spec.window)
+    elif spec.mixer == "mla":
+        d["mixer"] = A.mla_cache_descs(cfg, batch, seq)
+    elif spec.mixer == "mamba":
+        d["mixer"] = S.mamba_cache_descs(cfg, batch)
+    elif spec.mixer == "rglru":
+        d["mixer"] = R.rglru_cache_descs(cfg, batch)
+    if spec.cross_attn:
+        Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+        cdt = jnp.dtype(cfg.compute_dtype)
+        d["cross"] = {
+            "k": ParamDesc((batch, cfg.enc_frames, Hkv, Dh),
+                           ("batch", None, "kv_heads", None), dtype=cdt),
+            "v": ParamDesc((batch, cfg.enc_frames, Hkv, Dh),
+                           ("batch", None, "kv_heads", None), dtype=cdt),
+        }
+    return d
+
+
+def build_cache_descriptors(cfg: ModelConfig, batch: int, seq: int):
+    return [
+        stack_desc({f"l{i}": layer_cache_descs(cfg, s, batch, seq)
+                    for i, s in enumerate(pattern)}, reps)
+        for pattern, reps in cfg.blocks
+    ]
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def apply_layer(cfg: ModelConfig, spec: LayerSpec, p, x, *, mode, cache,
+                pos_t, enc_out):
+    new_cache: dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    c_mix = cache.get("mixer") if cache else None
+    if spec.mixer == "attn":
+        x, nc = A.apply_attn(cfg, p["mixer"], x, window=spec.window,
+                             causal=spec.causal, mode=mode, cache=c_mix,
+                             pos_t=pos_t)
+    elif spec.mixer == "mla":
+        x, nc = A.apply_mla(cfg, p["mixer"], x, mode=mode, cache=c_mix,
+                            pos_t=pos_t)
+    elif spec.mixer == "mamba":
+        x, nc = S.apply_mamba(cfg, p["mixer"], x, mode=mode, cache=c_mix,
+                              pos_t=pos_t)
+    elif spec.mixer == "rglru":
+        x, nc = R.apply_rglru(cfg, p["mixer"], x, mode=mode, cache=c_mix,
+                              pos_t=pos_t)
+    if nc is not None:
+        new_cache["mixer"] = nc
+    if spec.cross_attn:
+        c_cross = cache.get("cross") if cache else None
+        cmode = mode if mode != "decode" else "decode"
+        x, ncc = A.apply_attn(cfg, p["cross"], x, window=0, causal=False,
+                              mode=cmode, cache=c_cross, pos_t=pos_t,
+                              enc_out=enc_out, cross=True)
+        if ncc is not None and mode == "prefill":
+            new_cache["cross"] = ncc
+        elif mode == "decode":
+            new_cache["cross"] = c_cross
+    if spec.ffn == "dense":
+        x = L.apply_ffn(cfg, p["ffn"], x)
+    elif spec.ffn == "moe":
+        x, aux = M.apply_moe(cfg, p["moe"], x)
+    x = constrain(x, ("batch", "seq_act", None))
+    if cfg.cotangent_dtype and mode == "train":
+        # pin the residual-stream cotangent dtype at every layer boundary:
+        # without this the f32 score/CE dots leak f32 activation gradients
+        # (and f32 sequence-parallel collectives) through the whole stack
+        x = cotangent_cast(x, jnp.dtype(cfg.cotangent_dtype))
+    return x, (new_cache if new_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# group scan
+# ---------------------------------------------------------------------------
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots_with_no_batch_dims":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+def run_blocks(cfg: ModelConfig, blocks_params, x, *, mode, caches=None,
+               pos_t=None, enc_out=None, block_cfgs=None):
+    """Run all (pattern, repeats) groups.  Returns (x, new_caches, aux)."""
+    block_cfgs = block_cfgs or cfg.blocks
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    cdt = jnp.dtype(cfg.compute_dtype)
+    for gi, (pattern, reps) in enumerate(block_cfgs):
+        gp = blocks_params[gi]
+        if cfg.bf16_param_stack and mode == "train":
+            # hoist the param cast out of the scan: per-layer weight loads
+            # AND the stacked-gradient accumulation/reduction run in the
+            # compute dtype (the f32 master copy converts once per group)
+            gp = jax.tree_util.tree_map(
+                lambda w: w.astype(cdt)
+                if jnp.issubdtype(w.dtype, jnp.floating) else w, gp)
+        gc = caches[gi] if caches is not None else None
+
+        if mode == "train":
+            def body(x, p_g, _pattern=pattern):
+                aux = jnp.zeros((), jnp.float32)
+                for i, spec in enumerate(_pattern):
+                    x, _, a = apply_layer(cfg, spec, p_g[f"l{i}"], x,
+                                          mode="train", cache=None,
+                                          pos_t=None, enc_out=enc_out)
+                    aux = aux + a
+                return x, aux
+
+            body_r = _remat(cfg, body)
+            x, auxs = jax.lax.scan(lambda c, p_g: body_r(c, p_g), x, gp)
+            aux_total = aux_total + auxs.sum()
+            new_caches.append(None)
+        elif mode == "prefill":
+            def body_p(x, p_g, _pattern=pattern):
+                ncs = {}
+                for i, spec in enumerate(_pattern):
+                    x, nc, _ = apply_layer(cfg, spec, p_g[f"l{i}"], x,
+                                           mode="prefill", cache=None,
+                                           pos_t=None, enc_out=enc_out)
+                    ncs[f"l{i}"] = nc
+                return x, ncs
+
+            x, ncs = jax.lax.scan(body_p, x, gp)
+            new_caches.append(ncs)
+        else:  # decode
+            def body_d(x, xs, _pattern=pattern):
+                p_g, c_g = xs
+                ncs = {}
+                for i, spec in enumerate(_pattern):
+                    x, nc, _ = apply_layer(cfg, spec, p_g[f"l{i}"], x,
+                                           mode="decode", cache=c_g[f"l{i}"],
+                                           pos_t=pos_t, enc_out=enc_out)
+                    ncs[f"l{i}"] = nc
+                return x, ncs
+
+            x, ncs = jax.lax.scan(body_d, x, (gp, gc))
+            new_caches.append(ncs)
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def run_encoder(cfg: ModelConfig, params, enc_feats):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, F, d = enc_feats.shape
+    x = enc_feats.astype(cdt) + L.sinusoidal_pos(
+        d, jnp.arange(F))[None].astype(cdt)
+    x = constrain(x, ("batch", "seq_act", None))
+    enc_blocks = (((ENC_SPEC,), cfg.n_enc_layers),)
+    x, _, _ = run_blocks(cfg, params["encoder"]["blocks"], x, mode="train",
+                         block_cfgs=enc_blocks)
+    return L.apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def cotangent_cast(x, dtype):
+    """Identity whose cotangent is cast to `dtype` — a dtype barrier that
+    stops the f32 CE-loss cotangent from propagating f32 activation grads
+    (and f32 sequence-parallel collectives) through the whole stack."""
+    return x
+
+
+def _ct_fwd(x, dtype):
+    return x, None
+
+
+def _ct_bwd(dtype, _, ct):
+    return (ct.astype(dtype),)
+
+
+cotangent_cast.defvjp(_ct_fwd, _ct_bwd)
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens, pos_offset=0):
+    x = L.apply_embed(cfg, params, tokens)
+    if cfg.pos_embed == "sinusoidal":
+        pos = pos_offset + jnp.arange(tokens.shape[1])
+        x = x + L.sinusoidal_pos(cfg.d_model, pos)[None].astype(x.dtype)
+    return constrain(x, ("batch", "seq_act", None))
+
+
+def chunked_ce_loss(cfg: ModelConfig, params, x, labels):
+    """Sequence-chunked cross-entropy; chunk body rematted so full logits are
+    never resident."""
+    B, Snum, d = x.shape
+    table = L.unembed_table(cfg, params)
+    V, Vp = cfg.vocab, cfg.vocab_padded
+    ch = min(cfg.loss_chunk, Snum)
+    while Snum % ch:
+        ch -= 1
+    nch = Snum // ch
+    xc = jnp.moveaxis(x.reshape(B, nch, ch, d), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(B, nch, ch), 1, 0)
+    ldt = jnp.dtype(cfg.logits_dtype)
+
+    def chunk_fn(x_c, y_c):
+        logits = jnp.einsum("bsd,vd->bsv", x_c, table.astype(x_c.dtype),
+                            preferred_element_type=ldt)
+        if Vp > V:
+            logits = jnp.where(jnp.arange(Vp)[None, None] < V, logits,
+                               jnp.asarray(-1e30, ldt))
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # label log-prob via masked reduction (vocab-shard friendly: fuses
+        # into one pass over logits, no cross-shard gather)
+        onehot = jnp.arange(Vp)[None, None] == y_c[..., None]
+        ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        return (lse - ll).sum()
+
+    chunk_fn = jax.checkpoint(chunk_fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(tot, xs):
+        x_c, y_c = xs
+        return tot + chunk_fn(x_c, y_c), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc))
+    return total / (B * Snum)
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    """-> (loss, metrics)."""
+    tokens = batch["tokens"]
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = run_encoder(cfg, params, batch["enc_feats"])
+    x = embed_tokens(cfg, params, tokens)
+    x, _, aux = run_blocks(cfg, params["blocks"], x, mode="train",
+                           enc_out=enc_out)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if cfg.cotangent_dtype:
+        x = cotangent_cast(x, jnp.dtype(cfg.cotangent_dtype))
+    ce = chunked_ce_loss(cfg, params, x, batch["labels"])
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params, tokens, enc_feats=None):
+    """-> (last_token_logits, caches)."""
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = run_encoder(cfg, params, enc_feats)
+    x = embed_tokens(cfg, params, tokens)
+    x, caches, _ = run_blocks(cfg, params["blocks"], x, mode="prefill",
+                              enc_out=enc_out)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    last = x[:, -1:]
+    table = L.unembed_table(cfg, params)
+    logits = jnp.einsum("bsd,vd->bsv", last, table.astype(last.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits[:, :, :cfg.vocab], caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, pos_t):
+    """tokens: (B, 1); pos_t: scalar int — returns (logits, new_caches)."""
+    x = embed_tokens(cfg, params, tokens, pos_offset=pos_t)
+    x, new_caches, _ = run_blocks(cfg, params["blocks"], x, mode="decode",
+                                  caches=caches, pos_t=pos_t)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    table = L.unembed_table(cfg, params)
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits[:, :, :cfg.vocab], new_caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    """Zero-initialized cache (ring-buffer position slots marked invalid)."""
+    from repro.models.params import tree_map_desc
+
+    descs = build_cache_descriptors(cfg, batch, seq)
+
+    def mk(d: ParamDesc):
+        if d.dtype == jnp.int32:
+            return jnp.full(d.shape, -1, jnp.int32)
+        return jnp.zeros(d.shape, d.dtype)
+
+    return [tree_map_desc(mk, g) for g in descs]

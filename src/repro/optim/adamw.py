@@ -1,0 +1,80 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule (from scratch)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    microbatches: int = 1
+
+
+def schedule(hp: Hyper, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, hp.warmup))
+    prog = jnp.clip((step - hp.warmup) / max(1, hp.total_steps - hp.warmup), 0, 1)
+    cos = hp.min_lr_frac + (1 - hp.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return hp.lr * warm * cos
+
+
+def init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def update(grads, state, params, step, hp: Hyper):
+    lr = schedule(hp, step)
+    b1, b2 = hp.b1, hp.b2
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        step_p = mh / (jnp.sqrt(vh) + hp.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step_p + hp.weight_decay * pf)
+        return pf.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}

@@ -1,0 +1,76 @@
+"""Gradient compression for cross-pod sync (distributed-optimization trick).
+
+Two standard schemes with error feedback (residual carry), usable when the
+trainer runs in explicit-sync mode (cross-pod gradient exchange over DCN is
+the bandwidth-constrained link at 1000+ node scale):
+
+  * int8 quantization: per-tensor scale, symmetric
+  * top-k sparsification: keep the k largest-|g| entries
+
+Both are pure-JAX and tested for the error-feedback contraction property.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(g, frac: float):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    return vals, idx, flat.size
+
+
+def topk_densify(vals, idx, size, shape):
+    return jnp.zeros((size,), vals.dtype).at[idx].set(vals).reshape(shape)
+
+
+def compress_with_feedback(grads, residual, scheme: str = "int8",
+                           topk_frac: float = 0.01):
+    """Returns (compressed_repr, new_residual, decompressed).
+
+    decompressed is what the receiver reconstructs; residual carries the
+    compression error into the next step (error feedback).
+    """
+
+    def one(g, r):
+        x = g + r
+        if scheme == "int8":
+            q, scale = quantize_int8(x)
+            deq = dequantize_int8(q, scale)
+            return (q, scale), x - deq, deq
+        vals, idx, size = topk_sparsify(x, topk_frac)
+        deq = topk_densify(vals, idx, size, x.shape)
+        return (vals, idx), x - deq, deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = [o[0] for o in outs]
+    new_r = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    deq = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+    return comp, new_r, deq
+
+
+def init_residual(grads):
+    return jax.tree_util.tree_map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                  grads)
+
+
+def compressed_bytes(comp) -> int:
+    total = 0
+    for item in jax.tree_util.tree_leaves(comp):
+        total += item.size * item.dtype.itemsize
+    return total

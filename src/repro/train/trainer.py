@@ -1,0 +1,138 @@
+"""Engine-driven trainer: training as a Swift workflow (DESIGN.md §3).
+
+Every unit of work — host data staging, the train step itself, periodic
+evals, checkpoint writes — is a task in the Karajan engine, linked by data
+futures:
+
+    data(i)  ──┐
+               ├─> step(i) ──> params(i+1) ──> step(i+1) ...
+    params(i) ─┘         └──> eval(i)   (pipelined, off critical path)
+                         └──> ckpt(i)   (durable artifact -> manifest)
+
+Fault tolerance comes from the engine (retries on injected/transient step
+failures) plus the checkpoint manifest (data-availability restart, §3.12):
+`fit()` resumes from the latest durable step after a crash.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.core import Engine, RealClock, Workflow
+from repro.core.faults import FaultInjector, RetryPolicy
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import transformer as T
+from repro.models.params import init_tree
+from repro.optim import adamw
+from repro.train.steps import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 20
+    ckpt_every: int = 10
+    eval_every: int = 5
+    log_every: int = 1
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, hp: adamw.Hyper, dcfg: DataConfig,
+                 workdir: str, tcfg: TrainerConfig | None = None,
+                 fault_injector: FaultInjector | None = None):
+        self.cfg = cfg
+        self.hp = hp
+        self.dcfg = dcfg
+        self.workdir = workdir
+        self.tcfg = tcfg or TrainerConfig()
+        self.data = SyntheticLM(cfg, dcfg)
+        self.ckpt = Checkpointer(os.path.join(workdir, "ckpt"))
+        self.fault_injector = fault_injector
+        self._train_step = jax.jit(make_train_step(cfg, hp), donate_argnums=(0, 1))
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def init_state(self):
+        descs = T.build_descriptors(self.cfg)
+        params = init_tree(descs, jax.random.PRNGKey(self.tcfg.seed))
+        opt = adamw.init(params)
+        return params, opt
+
+    def restore_or_init(self):
+        params, opt = self.init_state()
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return params, opt, 0
+        state, step = self.ckpt.restore({"params": params, "opt": opt})
+        return state["params"], state["opt"], step
+
+    # ------------------------------------------------------------------
+    def fit(self, steps: int | None = None) -> list[dict]:
+        total = steps or self.tcfg.total_steps
+        params, opt, start = self.restore_or_init()
+
+        engine = Engine(RealClock(),
+                        retry_policy=RetryPolicy(max_retries=3),
+                        fault_injector=self.fault_injector)
+        engine.local_site(concurrency=1)
+        wf = Workflow("train", engine)
+
+        def stage_data(step):
+            return self.data.global_batch(step)
+
+        def do_step(state, batch, step):
+            params, opt = state
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.monotonic()
+            params, opt, metrics = self._train_step(
+                params, opt, batch, jnp.asarray(step, jnp.int32))
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step"] = step
+            metrics["step_time"] = time.monotonic() - t0
+            self.history.append(metrics)
+            return params, opt
+
+        def do_eval(state, step):
+            params, _ = state
+            batch = self.data.batch(10_000_000 + step)  # held-out stream
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            loss, _ = T.forward_train(self.cfg, params, batch)
+            rec = {"step": step, "eval_loss": float(loss)}
+            self.history.append(rec)
+            return rec
+
+        def do_ckpt(state, step):
+            params, opt = state
+            self.ckpt.save(step, {"params": params, "opt": opt})
+            return step
+
+        step_proc = wf.atomic(do_step, name="train_step")
+        data_proc = wf.atomic(stage_data, name="stage_data")
+        eval_proc = wf.atomic(do_eval, name="eval")
+        ckpt_proc = wf.atomic(do_ckpt, name="checkpoint")
+
+        from repro.core.futures import resolved
+        state_f = resolved((params, opt), name="state0")
+        side = []
+        for s in range(start, total):
+            batch_f = data_proc(s)               # stages while prev step runs
+            state_f = step_proc(state_f, batch_f, s)
+            if self.tcfg.eval_every and (s + 1) % self.tcfg.eval_every == 0:
+                side.append(eval_proc(state_f, s + 1))
+            if self.tcfg.ckpt_every and (s + 1) % self.tcfg.ckpt_every == 0:
+                side.append(ckpt_proc(state_f, s + 1))
+        final = wf.gather([state_f] + side, name="train_done")
+        wf.run()
+        if final.failed:
+            raise final._error
+        self.vdc = engine.vdc
+        self.engine_stats = engine.stats()
+        return self.history

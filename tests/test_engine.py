@@ -1,0 +1,232 @@
+"""Unit tests for the Karajan engine, Falkon service, sites, and faults."""
+import pytest
+
+from repro.core import (BatchSchedulerProvider, ClusteringProvider, DRPConfig,
+                        Engine, FalkonConfig, FalkonProvider, FalkonService,
+                        LocalProvider, SimClock, Workflow)
+from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
+from repro.core.futures import DataFuture, resolved, when_all
+
+
+# ---------------------------------------------------------------------------
+# futures
+# ---------------------------------------------------------------------------
+
+def test_future_single_assignment():
+    f = DataFuture("x")
+    f.set(1)
+    assert f.get() == 1
+    with pytest.raises(Exception):
+        f.set(2)
+
+
+def test_when_all_fires_once():
+    fs = [DataFuture() for _ in range(3)]
+    hits = []
+    when_all(fs, lambda: hits.append(1))
+    for f in fs:
+        f.set(0)
+    assert hits == [1]
+
+
+def test_future_callbacks_after_resolution():
+    f = resolved(42)
+    got = []
+    f.on_done(lambda ff: got.append(ff.get()))
+    assert got == [42]
+
+
+# ---------------------------------------------------------------------------
+# dispatch / dependencies
+# ---------------------------------------------------------------------------
+
+def test_dataflow_ordering():
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site(concurrency=2)
+    order = []
+    a = eng.submit("a", lambda: order.append("a") or 1)
+    b = eng.submit("b", lambda x: order.append("b") or x + 1, [a])
+    c = eng.submit("c", lambda x: order.append("c") or x + 1, [b])
+    eng.run()
+    assert order == ["a", "b", "c"]
+    assert c.get() == 3
+
+
+def test_implicit_parallelism():
+    """Independent tasks overlap in (virtual) time."""
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.add_site("s", LocalProvider(clock, concurrency=8), capacity=8)
+    outs = [eng.submit(f"t{i}", None, duration=10.0) for i in range(8)]
+    eng.run()
+    assert clock.now() == pytest.approx(10.0)
+    assert all(o.resolved for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# retries / fault handling
+# ---------------------------------------------------------------------------
+
+def test_transient_retry_succeeds():
+    clock = SimClock()
+    inj = FaultInjector().fail_first_n("flaky", 2)
+    eng = Engine(clock, retry_policy=RetryPolicy(max_retries=3),
+                 fault_injector=inj)
+    eng.local_site(concurrency=1)
+    out = eng.submit("flaky", lambda: "ok")
+    eng.run()
+    assert out.get() == "ok"
+    assert eng.vdc.summary()["failed"] == 2  # two retried attempts recorded
+
+
+def test_retry_exhaustion_fails_future():
+    clock = SimClock()
+    inj = FaultInjector().fail_first_n("doomed", 10)
+    eng = Engine(clock, retry_policy=RetryPolicy(max_retries=2),
+                 fault_injector=inj)
+    eng.local_site(concurrency=1)
+    out = eng.submit("doomed", lambda: "ok")
+    eng.run()
+    assert out.failed
+    assert eng.tasks_failed == 1
+
+
+def test_upstream_failure_propagates():
+    clock = SimClock()
+    eng = Engine(clock, retry_policy=RetryPolicy(max_retries=0))
+    eng.local_site()
+
+    def boom():
+        raise TaskFailure("boom")
+
+    a = eng.submit("a", boom)
+    b = eng.submit("b", lambda x: x, [a])
+    eng.run()
+    assert a.failed and b.failed
+
+
+def test_site_rescheduling_on_site_fault():
+    """Site-kind failures move the task to a different site (§3.12)."""
+    clock = SimClock()
+    eng = Engine(clock, retry_policy=RetryPolicy(max_retries=3))
+    ran_on = []
+
+    class RecordingProvider(LocalProvider):
+        def __init__(self, clock, name):
+            super().__init__(clock, concurrency=4)
+            self.site_name = name
+
+        def submit(self, task, when_done):
+            ran_on.append(self.site_name)
+            if self.site_name == "bad":
+                when_done(False, None, TaskFailure("stale NFS", kind="site"))
+                return
+            super().submit(task, when_done)
+
+    bad = eng.add_site("bad", RecordingProvider(clock, "bad"), capacity=4)
+    bad.score = 10.0  # make it the first choice
+    eng.add_site("good", RecordingProvider(clock, "good"), capacity=4)
+    out = eng.submit("t", lambda: "done")
+    eng.run()
+    assert out.get() == "done"
+    assert "bad" in ran_on and "good" in ran_on
+
+
+def test_falkon_host_suspension():
+    """Repeated failures on one executor suspend that host."""
+    clock = SimClock()
+    svc = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=2, alloc_latency=0.0),
+        host_fail_threshold=2, host_suspend_time=1000.0))
+    svc.provision(2)
+    inj = FaultInjector().fail_host("falkon-host0", 2)
+    eng = Engine(clock, retry_policy=RetryPolicy(max_retries=4),
+                 fault_injector=inj)
+    eng.add_site("f", FalkonProvider(svc), capacity=2)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(6)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    host0 = svc.executors[0]
+    assert host0.suspended_until > 0  # was suspended at some point
+
+
+# ---------------------------------------------------------------------------
+# falkon DRP + metrics
+# ---------------------------------------------------------------------------
+
+def test_drp_grows_pool_on_queue_pressure():
+    clock = SimClock()
+    svc = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=16, alloc_latency=10.0, alloc_chunk=4)))
+    eng = Engine(clock)
+    eng.add_site("f", FalkonProvider(svc), capacity=16)
+    outs = [eng.submit(f"t{i}", None, duration=5.0) for i in range(32)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    assert len(svc.alloc_log) >= 2  # grew incrementally
+    assert svc.utilization()["dispatched"] == 32
+
+
+def test_clustering_amortizes_overhead():
+    """Bundled submission beats per-task submission on a slow scheduler."""
+
+    def run(cluster):
+        clock = SimClock()
+        eng = Engine(clock)
+        inner = BatchSchedulerProvider(clock, nodes=4, submit_rate=1.0,
+                                       sched_latency=10.0)
+        prov = ClusteringProvider(clock, inner, window=0.5, bundle_size=8) \
+            if cluster else inner
+        eng.add_site("s", prov, capacity=4)
+        outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(32)]
+        eng.run()
+        assert all(o.resolved for o in outs)
+        return clock.now()
+
+    t_clustered = run(True)
+    t_plain = run(False)
+    assert t_plain / t_clustered >= 2.0  # paper: 2-4x improvement
+
+
+def test_load_balancing_proportional_to_speed():
+    """Fig 11: the faster site completes more jobs."""
+    clock = SimClock()
+    eng = Engine(clock)
+
+    class TimedProvider(LocalProvider):
+        def __init__(self, clock, factor):
+            super().__init__(clock, concurrency=8)
+            self.factor = factor
+
+        def submit(self, task, when_done):
+            task.duration = task.duration * self.factor
+            super().submit(task, when_done)
+
+    fast = eng.add_site("fast", TimedProvider(clock, 0.5), capacity=8)
+    slow = eng.add_site("slow", TimedProvider(clock, 1.0), capacity=8)
+    wf = Workflow("lb", eng)
+    p = wf.sim_proc("job", duration=4.0)
+    out = wf.foreach(list(range(480)), p)
+    wf.run()
+    assert out.resolved
+    assert fast.stats.completed + slow.stats.completed == 480
+    assert fast.stats.completed > slow.stats.completed
+
+
+# ---------------------------------------------------------------------------
+# provenance
+# ---------------------------------------------------------------------------
+
+def test_provenance_records_invocations():
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site(concurrency=2)
+    a = eng.submit("stage_a", lambda: 1)
+    b = eng.submit("stage_b", lambda x: x + 1, [a])
+    eng.run()
+    s = eng.vdc.summary()
+    assert s["invocations"] == 2 and s["ok"] == 2
+    recs = eng.vdc.by_task("stage_b")
+    assert len(recs) == 1
+    assert recs[0].end_time >= recs[0].start_time >= 0

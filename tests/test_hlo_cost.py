@@ -1,0 +1,99 @@
+"""HLO cost analyzer: validated against hand-computable compiled programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloModule, analyze
+
+
+def _compile(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    t = _compile(lambda a, b: a @ b, (512, 512), (512, 512))
+    c = analyze(t)
+    assert c.flops == pytest.approx(2 * 512 ** 3, rel=0.01)
+
+
+def test_scan_multiplies_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=16)
+        return y
+
+    c = analyze(_compile(f, (512, 512), (512, 512)))
+    assert c.flops == pytest.approx(16 * 2 * 512 ** 3, rel=0.02)
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def inner(c, _):
+            return jnp.tanh(c @ w), None
+
+        def outer(c, _):
+            y, _ = jax.lax.scan(inner, c, None, length=4)
+            return y, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    c = analyze(_compile(f, (512, 512), (512, 512)))
+    assert c.flops == pytest.approx(16 * 2 * 512 ** 3, rel=0.02)
+
+
+def test_bytes_scale_with_tensor_size():
+    c1 = analyze(_compile(lambda a, b: a + b, (1024, 1024), (1024, 1024)))
+    c2 = analyze(_compile(lambda a, b: a + b, (2048, 1024), (2048, 1024)))
+    assert c2.bytes == pytest.approx(2 * c1.bytes, rel=0.05)
+    # add: read 2 operands + write 1 result
+    assert c1.bytes == pytest.approx(3 * 1024 * 1024 * 4, rel=0.05)
+
+
+def test_collective_wire_bytes():
+    import os
+    import subprocess
+    import sys
+    # needs >1 device: run in a subprocess with forced host device count
+    code = """
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+import sys
+sys.path.insert(0, "src")
+from repro.launch.hlo_cost import analyze
+mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32,
+                         sharding=NamedSharding(mesh, P("d")))
+f = jax.jit(lambda a: a.sum(), out_shardings=NamedSharding(mesh, P()))
+c = analyze(f.lower(x).compile().as_text())
+# scalar f32 all-reduce: 2 * (7/8) * 4 = 7 bytes on the wire
+assert abs(c.coll_wire - 7.0) < 0.01, c.coll_wire
+assert "all-reduce" in c.coll_by_kind
+print("OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, cwd="/root/repo")
+    assert "OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_wrapped_long_lines_parse():
+    """Tuple-typed whiles wrap across physical lines in HLO dumps; the
+    parser must reassemble them (regression for the while.706 bug)."""
+    def f(x, w):
+        def body(carry, _):
+            a, b, c, d, e = carry
+            a = jnp.tanh(a @ w)
+            return (a, b + 1.0, c * 2.0, d - 1.0, e + a.sum()), None
+
+        init = (x, x, x, x, jnp.zeros(()))
+        (a, *_), _ = jax.lax.scan(body, init, None, length=8)
+        return a
+
+    t = _compile(f, (256, 256), (256, 256))
+    c = analyze(t)
+    assert c.flops == pytest.approx(8 * 2 * 256 ** 3, rel=0.1)

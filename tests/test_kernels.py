@@ -1,0 +1,146 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+oracles (interpret mode on CPU; the kernels target TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 1, 1, 128, 64),
+    (2, 4, 2, 256, 64),
+    (1, 8, 1, 128, 32),      # MQA
+    (2, 2, 2, 192, 64),      # odd block split
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Hq, Hkv, S, D, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D)).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    exp = ref.ref_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bq=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+    s_mult=st.integers(1, 3),
+    window=st.sampled_from([0, 32, 96]),
+)
+def test_flash_attention_block_shape_property(bq, bk, s_mult, window):
+    """Property: output is invariant to the kernel block decomposition."""
+    S, D = 128 * s_mult, 32
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (1, 2, S, D))
+    k = jax.random.normal(ks[1], (1, 2, S, D))
+    v = jax.random.normal(ks[2], (1, 2, S, D))
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=bq, block_k=bk)
+    exp = ref.ref_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rg-lru scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W,chunk,bw", [
+    (1, 64, 128, 16, 128),
+    (2, 128, 256, 32, 128),
+    (2, 96, 128, 32, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan_matches_ref(B, S, W, chunk, bw, dtype):
+    key = jax.random.PRNGKey(1)
+    a = jax.random.uniform(key, (B, S, W), jnp.float32, 0.5, 0.999).astype(dtype)
+    b = jax.random.normal(key, (B, S, W)).astype(dtype)
+    h0 = jax.random.normal(key, (B, W))
+    y, hf = ops.rglru_scan(a, b, h0, chunk=chunk, block_w=bw)
+    ye, hfe = ref.ref_linear_scan(a.astype(jnp.float32),
+                                  b.astype(jnp.float32), h0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ye, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfe),
+                               **_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.sampled_from([8, 16, 32, 64]),
+       bw=st.sampled_from([64, 128, 256]))
+def test_rglru_chunking_property(chunk, bw):
+    """Property: the recurrence result is invariant to chunk/block split."""
+    key = jax.random.PRNGKey(7)
+    a = jax.random.uniform(key, (2, 64, 256), jnp.float32, 0.2, 0.99)
+    b = jax.random.normal(key, (2, 64, 256))
+    h0 = jnp.zeros((2, 256))
+    y, hf = ops.rglru_scan(a, b, h0, chunk=chunk, block_w=bw)
+    ye, hfe = ref.ref_linear_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,D,N,chunk,bd", [
+    (1, 32, 64, 8, 8, 64),
+    (2, 64, 128, 16, 16, 64),
+    (1, 96, 64, 8, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_scan_matches_ref(B, S, D, N, chunk, bd, dtype):
+    key = jax.random.PRNGKey(2)
+    u = jax.random.normal(key, (B, S, D)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(key, (B, S, D))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(key, (D, N)) * 0.5)
+    Bm = jax.random.normal(key, (B, S, N)).astype(dtype)
+    Cm = jax.random.normal(key, (B, S, N)).astype(dtype)
+    y, hf = ops.mamba_scan(u, dt, A, Bm, Cm, chunk=chunk, block_d=bd)
+    ye, hfe = ref.ref_selective_scan(u, dt, A, Bm, Cm)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ye, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfe), **tol)
+
+
+def test_mamba_scan_state_carry():
+    """Splitting a sequence across two kernel calls with the carried state
+    equals one long call (the decode/prefill contract)."""
+    key = jax.random.PRNGKey(3)
+    B, S, D, N = 1, 64, 32, 8
+    u = jax.random.normal(key, (B, S, D))
+    dt = jax.nn.softplus(jax.random.normal(key, (B, S, D)))
+    A = -jnp.exp(jax.random.normal(key, (D, N)) * 0.5)
+    Bm = jax.random.normal(key, (B, S, N))
+    Cm = jax.random.normal(key, (B, S, N))
+    y_full, h_full = ops.mamba_scan(u, dt, A, Bm, Cm, chunk=16, block_d=32)
+    h = S // 2
+    y1, h1 = ops.mamba_scan(u[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h],
+                            chunk=16, block_d=32)
+    y2, h2 = ops.mamba_scan(u[:, h:], dt[:, h:], A, Bm[:, h:], Cm[:, h:],
+                            h0=h1, chunk=16, block_d=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-5, atol=1e-5)

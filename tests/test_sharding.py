@@ -1,0 +1,90 @@
+"""Sharding-rule resolution: divisibility fallback, ZeRO extension, and
+property tests over arbitrary shapes."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.configs import registry
+from repro.launch.specs import axis_rules_for, opt_rule_extend
+from repro.models.params import ParamDesc, default_rules, resolve_spec
+
+MESH = {"data": 16, "model": 16}
+
+
+def test_divisible_axes_shard():
+    d = ParamDesc((1024, 2816), ("embed", "ff"))
+    spec = resolve_spec(d, default_rules(), MESH)
+    assert spec == P(None, "model")
+
+
+def test_indivisible_axes_fall_back_to_replication():
+    # 28 heads on a 16-way model axis -> replicated
+    d = ParamDesc((3584, 28, 128), ("embed", "heads", "head_dim"))
+    spec = resolve_spec(d, default_rules(), MESH)
+    assert spec == P()
+
+
+def test_axis_used_once_per_tensor():
+    # experts->data and batch->data cannot both apply to one tensor
+    d = ParamDesc((16, 160, 64), ("batch", "experts", None))
+    spec = resolve_spec(d, default_rules(), MESH)
+    assert spec == P("data")  # first dim grabs it; second falls back
+
+
+def test_opt_rule_extend_adds_data_axis():
+    d = ParamDesc((5376, 21504), ("embed", "ff"))
+    spec = resolve_spec(d, default_rules(), MESH)
+    ext = opt_rule_extend(spec, d.shape, MESH, "data")
+    assert ext == P("data", "model")
+
+
+def test_opt_rule_extend_noop_when_data_used():
+    spec = P("data", "model")
+    ext = opt_rule_extend(spec, (160, 1536), MESH, "data")
+    assert ext == spec
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+    axes=st.lists(st.sampled_from(
+        ["embed", "ff", "heads", "vocab", "batch", "experts", None]),
+        min_size=1, max_size=4),
+)
+def test_resolve_spec_properties(dims, axes):
+    """Properties: (1) every sharded dim is divisible by its axis size;
+    (2) no mesh axis is used twice; (3) spec length <= rank."""
+    n = min(len(dims), len(axes))
+    d = ParamDesc(tuple(dims[:n]), tuple(axes[:n]))
+    spec = resolve_spec(d, default_rules(), MESH)
+    assert len(spec) <= n
+    used = []
+    for dim, part in zip(d.shape, tuple(spec) + (None,) * (n - len(spec))):
+        if part is None:
+            continue
+        names = (part,) if isinstance(part, str) else tuple(part)
+        size = 1
+        for nm in names:
+            size *= MESH[nm]
+        assert dim % size == 0
+        used.extend(names)
+    assert len(used) == len(set(used))
+
+
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_axis_rules_per_cell(shape):
+    cfg = registry.get_config("gemma3-27b")
+    mesh = type("M", (), {"axis_names": ("data", "model"),
+                          "devices": type("D", (), {"shape": (16, 16)})()})()
+    rules = axis_rules_for(cfg, SHAPES[shape], mesh)
+    cell = SHAPES[shape]
+    if cell.kind in ("train", "prefill"):
+        assert rules["seq_act"] == "model"
+    if cell.kind == "decode":
+        assert rules["seq_act"] is None
+        if shape == "long_500k":
+            assert rules["kv_seq"] == "data"
+        else:
+            assert rules["kv_seq"] == "model"

