@@ -1,0 +1,222 @@
+"""Million-task scheduler benchmark (MolDyn shape: wide fan-out + gather).
+
+The paper's headline scale claim is hundreds of thousands of parallel
+computations (MolDyn: 244 molecules = 20,497 jobs; Falkon microbenchmarks
+queue 1.5 M tasks over 54k executors).  This benchmark drives the layered
+scheduler through a synthetic MolDyn-shaped workflow — per molecule 3 serial
+prep jobs -> 68 independent wide jobs -> gather -> 13 serial post jobs — at
+1,000,000 tasks on `SimClock`, under both the Falkon provider and the
+simulated batch-scheduler provider, and reports wall-clock, tasks/s, peak
+RSS, and the simulated makespan.
+
+The engine runs in its bounded-memory configuration (``provenance=
+"summary"``, Falkon ``trace=False``): no per-task log growth, so memory is
+set by the dataflow graph itself, not by run length.
+
+Self-measured baseline comparison: ``--baseline <git-rev>`` materializes the
+repo at that revision (git archive) into a temp dir and re-runs this same
+workload against the old `repro` package in a subprocess (the benchmark
+feature-detects `trace=`/`provenance=`, so it runs unmodified against the
+seed engine).  The acceptance gate for the scheduler refactor is >= 10x the
+pre-refactor tasks/s at 100k tasks at the paper-scale executor pool
+(the seed engine's per-completion DRP sweep made per-task cost O(pool
+size); see DESIGN.md §5).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.million_tasks                 # 1M tasks
+  PYTHONPATH=src python -m benchmarks.million_tasks --tasks 100000 \
+      --baseline HEAD~1                                             # compare
+"""
+from __future__ import annotations
+
+import argparse
+import inspect
+import json
+import os
+import resource
+import subprocess
+import sys
+import tempfile
+import time
+
+from repro.core import (BatchSchedulerProvider, DRPConfig, Engine,
+                        FalkonConfig, FalkonProvider, FalkonService,
+                        SimClock, Workflow)
+
+SERIAL_PRE, WIDE, SERIAL_POST = 3, 68, 13
+JOBS_PER_MOL = SERIAL_PRE + WIDE + SERIAL_POST      # 84, as in MolDyn
+JOB_S = 168.0                                       # ~paper job duration
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def build_workload(eng, n_tasks: int):
+    """Submit a MolDyn-shaped workflow of ~n_tasks tasks; returns
+    (exact task count, final gather future)."""
+    wf = Workflow("million", eng)
+    molecules = max(1, round((n_tasks - 1) / JOBS_PER_MOL))
+    shared = eng.submit("annotate", None, duration=JOB_S)
+    finals = []
+    for _ in range(molecules):
+        f = shared
+        for _ in range(SERIAL_PRE):
+            f = eng.submit("prep", None, [f], duration=JOB_S)
+        wide = [eng.submit("charmm", None, [f], duration=JOB_S)
+                for _ in range(WIDE)]
+        g = wf.gather(wide)
+        for _ in range(SERIAL_POST):
+            g = eng.submit("post", None, [g], duration=JOB_S)
+        finals.append(g)
+    return 1 + molecules * JOBS_PER_MOL, wf.gather(finals)
+
+
+def _supports(callable_, param: str) -> bool:
+    try:
+        return param in inspect.signature(callable_).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def make_engine(provider: str, executors: int):
+    """Engine in bounded-memory mode where the installed repro supports it
+    (feature-detected so the same code measures the seed engine)."""
+    clock = SimClock()
+    ekw = {"provenance": "summary"} if _supports(Engine, "provenance") else {}
+    eng = Engine(clock, **ekw)
+    if provider == "falkon":
+        fkw = {"trace": False} if _supports(FalkonService, "trace") else {}
+        svc = FalkonService(clock, FalkonConfig(
+            drp=DRPConfig(max_executors=executors, alloc_latency=81.0,
+                          alloc_chunk=max(1, executors // 4))), **fkw)
+        eng.add_site("falkon", FalkonProvider(svc), capacity=executors)
+    elif provider == "batch":
+        eng.add_site("batch",
+                     BatchSchedulerProvider(eng.clock, nodes=executors,
+                                            submit_rate=2.0,
+                                            sched_latency=60.0),
+                     capacity=executors)
+    else:
+        raise ValueError(f"unknown provider {provider!r}")
+    return eng
+
+
+def measure(provider: str, n_tasks: int, executors: int) -> dict:
+    t0 = time.monotonic()
+    eng = make_engine(provider, executors)
+    n, out = build_workload(eng, n_tasks)
+    build_s = time.monotonic() - t0
+    t1 = time.monotonic()
+    eng.run()
+    run_s = time.monotonic() - t1
+    assert out.resolved, f"workflow did not complete ({provider})"
+    assert eng.tasks_completed == n
+    wall = time.monotonic() - t0
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    return {
+        "provider": provider,
+        "tasks": n,
+        "executors": executors,
+        "wall_s": round(wall, 3),
+        "build_s": round(build_s, 3),
+        "run_s": round(run_s, 3),
+        "tasks_per_s": round(n / wall, 1),
+        "makespan_sim_s": round(eng.clock.now(), 1),
+        "peak_rss_mb": round(rss_mb, 1),
+    }
+
+
+def measure_baseline(rev: str, provider: str, n_tasks: int,
+                     executors: int) -> dict:
+    """Run the same workload against the repo tree at `rev` (subprocess with
+    PYTHONPATH pointed at the archived src/)."""
+    with tempfile.TemporaryDirectory(prefix="sched-baseline-") as tmp:
+        tar = os.path.join(tmp, "tree.tar")
+        with open(tar, "wb") as f:
+            subprocess.run(["git", "archive", rev], cwd=_REPO_ROOT,
+                           stdout=f, check=True)
+        subprocess.run(["tar", "-xf", tar, "-C", tmp], check=True)
+        env = dict(os.environ, PYTHONPATH=os.path.join(tmp, "src"))
+        out = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--tasks",
+             str(n_tasks), "--providers", provider, "--executors",
+             str(executors), "--json"],
+            env=env, cwd=_REPO_ROOT, capture_output=True, text=True,
+            check=True)
+        row = json.loads(out.stdout.strip().splitlines()[-1])["rows"][0]
+        row["rev"] = rev
+        return row
+
+
+def run() -> list[dict]:
+    """benchmarks/run.py entry: small smoke-scale run of both providers."""
+    rows = []
+    for provider in ("falkon", "batch"):
+        r = measure(provider, n_tasks=20_000, executors=512)
+        rows.append({
+            "name": f"million_tasks.{provider}.20k",
+            "us_per_call": 1e6 * r["wall_s"] / r["tasks"],
+            "derived": (f"{r['tasks_per_s']:.0f} tasks/s, "
+                        f"rss {r['peak_rss_mb']:.0f} MB, "
+                        f"makespan {r['makespan_sim_s']:.0f} sim-s"),
+        })
+    return rows
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--tasks", type=int, default=1_000_000)
+    p.add_argument("--providers", default="falkon,batch")
+    p.add_argument("--executors", type=int, default=2048,
+                   help="pool size (paper runs Falkon up to 54k executors)")
+    p.add_argument("--baseline", default=None, metavar="GIT_REV",
+                   help="also measure the engine at this git revision on "
+                        "the same workload (subprocess) and report speedup")
+    p.add_argument("--baseline-tasks", type=int, default=100_000,
+                   help="task count for the --baseline comparison")
+    p.add_argument("--json", action="store_true",
+                   help="emit one JSON object on stdout (machine readable)")
+    args = p.parse_args()
+
+    providers = [s.strip() for s in args.providers.split(",") if s.strip()]
+    rows = [measure(prov, args.tasks, args.executors) for prov in providers]
+    report = {"rows": rows}
+
+    if args.baseline:
+        comparisons = []
+        for prov in providers:
+            new = measure(prov, args.baseline_tasks, args.executors)
+            old = measure_baseline(args.baseline, prov, args.baseline_tasks,
+                                   args.executors)
+            comparisons.append({
+                "provider": prov,
+                "tasks": args.baseline_tasks,
+                "new_tasks_per_s": new["tasks_per_s"],
+                "old_tasks_per_s": old["tasks_per_s"],
+                "speedup": round(new["tasks_per_s"] /
+                                 max(old["tasks_per_s"], 1e-9), 2),
+                "new_rss_mb": new["peak_rss_mb"],
+                "old_rss_mb": old["peak_rss_mb"],
+                "baseline_rev": args.baseline,
+            })
+        report["baseline"] = comparisons
+
+    if args.json:
+        print(json.dumps(report))
+        return 0
+    for r in rows:
+        print(f"{r['provider']:>7}: {r['tasks']:,} tasks in "
+              f"{r['wall_s']:.1f}s wall ({r['tasks_per_s']:,.0f} tasks/s), "
+              f"peak RSS {r['peak_rss_mb']:.0f} MB, "
+              f"sim makespan {r['makespan_sim_s']:,.0f} s "
+              f"({r['executors']} executors)")
+    for c in report.get("baseline", []):
+        print(f"{c['provider']:>7}: vs {c['baseline_rev']} at "
+              f"{c['tasks']:,} tasks: {c['new_tasks_per_s']:,.0f} vs "
+              f"{c['old_tasks_per_s']:,.0f} tasks/s "
+              f"-> {c['speedup']:.1f}x; RSS {c['new_rss_mb']:.0f} vs "
+              f"{c['old_rss_mb']:.0f} MB")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,9 +6,16 @@ benchmarks/results/.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
+
+# allow `python benchmarks/run.py` from anywhere (not just -m with
+# PYTHONPATH set): make both the repo root and src/ importable
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 MODULES = [
     "benchmarks.microbench",           # §4: 487 t/s, 54k executors, queue
@@ -25,15 +32,32 @@ MODULES = [
     "benchmarks.code_size",            # Table 1
     "benchmarks.vmap_clustering",      # TPU adaptation of clustering
     "benchmarks.roofline",             # §Roofline (from dry-run artifacts)
+    "benchmarks.million_tasks",        # scheduler scale (smoke-sized here)
 ]
 
 
 def main() -> int:
+    import argparse
     import importlib
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes to run "
+                         "(e.g. --only microbench,million_tasks); "
+                         "used by the CI smoke tier")
+    args = ap.parse_args()
+    modules = MODULES
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",") if w.strip()}
+        modules = [m for m in MODULES if m.split(".")[-1] in wanted]
+        missing = wanted - {m.split(".")[-1] for m in modules}
+        if missing:
+            sys.stderr.write(f"unknown benchmark modules: {missing}\n")
+            return 2
 
     print("name,us_per_call,derived")
     failed = 0
-    for modname in MODULES:
+    for modname in modules:
         t0 = time.time()
         try:
             mod = importlib.import_module(modname)

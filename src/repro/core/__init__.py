@@ -1,19 +1,28 @@
 """Core paper technique: Swift (workflow DSL + XDTM) / Karajan (futures
 engine) / Falkon (multi-level scheduling) adapted to JAX/TPU.
 
+Layered scheduler subsystem (see DESIGN.md): task records
+(`repro.core.task`) -> providers (`repro.core.providers`) -> Falkon service
+(`repro.core.falkon`) -> sites/load balancing (`repro.core.sites`) ->
+engine dataflow + dispatch policy (`repro.core.engine`).
+
 Public API:
     Engine, Workflow, Dataset, mappers, FalkonService, providers,
     RestartLog, FaultInjector, SimClock/RealClock.
 """
-from repro.core.engine import (BatchSchedulerProvider, ClusteringProvider,
-                               Engine, FalkonProvider, LocalProvider, Task)
+from repro.core.engine import Engine
 from repro.core.falkon import DRPConfig, FalkonConfig, FalkonService
 from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
 from repro.core.futures import DataFuture, resolved, when_all
+from repro.core.metrics import StreamStat
 from repro.core.provenance import VDC, InvocationRecord
+from repro.core.providers import (BatchSchedulerProvider, ClusteringProvider,
+                                  FalkonProvider, LocalProvider, Provider,
+                                  WorkerPoolProvider)
 from repro.core.restart_log import RestartLog
 from repro.core.simclock import RealClock, SimClock
 from repro.core.sites import LoadBalancer, Site
+from repro.core.task import Task, task_key
 from repro.core.workflow import Procedure, Workflow
 from repro.core.xdtm import (ArrayOf, CSVMapper, Dataset, FILE,
                              FileSystemMapper, FLOAT, INT, ListMapper,
@@ -21,12 +30,13 @@ from repro.core.xdtm import (ArrayOf, CSVMapper, Dataset, FILE,
                              STRING, Struct)
 
 __all__ = [
-    "Engine", "Workflow", "Procedure", "Task",
+    "Engine", "Workflow", "Procedure", "Task", "task_key",
+    "Provider", "WorkerPoolProvider",
     "LocalProvider", "BatchSchedulerProvider", "FalkonProvider",
     "ClusteringProvider", "FalkonService", "FalkonConfig", "DRPConfig",
     "DataFuture", "resolved", "when_all", "SimClock", "RealClock",
     "RestartLog", "FaultInjector", "RetryPolicy", "TaskFailure",
-    "VDC", "InvocationRecord", "LoadBalancer", "Site",
+    "VDC", "InvocationRecord", "LoadBalancer", "Site", "StreamStat",
     "Dataset", "Mapper", "ListMapper", "FileSystemMapper", "CSVMapper",
     "ShardMapper", "PhysicalRef", "Struct", "ArrayOf", "Primitive",
     "INT", "FLOAT", "STRING", "FILE",

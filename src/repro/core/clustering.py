@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import Provider, Task
-from repro.core import falkon as falkon_mod
+from repro.core.providers import Provider
 from repro.core.simclock import Clock
+from repro.core.task import Task, execute_task
 
 
 def vmap_signature(fn: Callable, args: list) -> tuple:
@@ -53,7 +53,7 @@ class VmapClusteringProvider(Provider):
     def submit(self, task: Task, when_done: Callable) -> None:
         key = task.vmap_key
         if key is None or task.fn is None:
-            ok, v, e = falkon_mod._execute(task)
+            ok, v, e = execute_task(task)
             when_done(ok, v, e)
             return
         self._pending[(key, id(task.fn))].append((task, when_done))
@@ -76,7 +76,7 @@ class VmapClusteringProvider(Provider):
         self.tasks_executed += len(bundle)
         if len(bundle) == 1:
             task, cb = bundle[0]
-            ok, v, e = falkon_mod._execute(task)
+            ok, v, e = execute_task(task)
             cb(ok, v, e)
             return
         tasks = [t for t, _ in bundle]
@@ -112,5 +112,5 @@ class VmapClusteringProvider(Provider):
                 cb(True, r, None)
         except BaseException as err:  # noqa: BLE001 - fall back per-task
             for t, cb in bundle:
-                ok, v, e = falkon_mod._execute(t)
+                ok, v, e = execute_task(t)
                 cb(ok, v, e)

@@ -1,4 +1,5 @@
-"""The Karajan-style execution engine (paper §3.8-3.13).
+"""The Karajan-style execution engine (paper §3.8-3.13) — dataflow +
+dispatch policy only.
 
 Event-driven, future-based: every task is a lightweight record (no OS
 threads); data dependencies are futures; a task becomes *ready* when its
@@ -6,237 +7,46 @@ argument futures resolve and is dispatched through a provider picked by the
 score-based load balancer.  Pipelining across stages is inherent (§3.13 —
 "comes for free with the future mechanism").
 
-Providers implement the paper's abstract provider interface (§3.11):
+The engine is the top of the layered scheduler subsystem (DESIGN.md §1):
+task records live in `repro.core.task`, providers in
+`repro.core.providers`, the Falkon service in `repro.core.falkon`, and
+sites/load-balancing in `repro.core.sites`.  Per-task work here is O(1) in
+both task count and site count: site candidates come from the balancer's
+per-app index, and the ready queue (`_pending`) is drained in coalesced
+batches rather than one scheduled event per completion.
 
-  * LocalProvider           — run on the submit host
-  * BatchSchedulerProvider  — simulated PBS/Condor: serial submission rate +
-                              scheduler latency + node pool (the GRAM+PBS
-                              baseline of Figs 6/12/13/14)
-  * FalkonProvider          — the Falkon service (multi-level scheduling)
-  * ClusteringProvider      — wraps any provider, bundling small tasks within
-                              a clustering window (§3.13)
+The pre-refactor names (`Task`, `Provider`, `LocalProvider`,
+`BatchSchedulerProvider`, `FalkonProvider`, `ClusteringProvider`) are
+re-exported so existing imports of `repro.core.engine` keep resolving.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
 from collections import deque
-from typing import Any, Callable, Optional
 
-from repro.core import falkon as falkon_mod
 from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
 from repro.core.futures import DataFuture, when_all
 from repro.core.provenance import VDC, InvocationRecord
+from repro.core.providers import (BatchSchedulerProvider, ClusteringProvider,
+                                  FalkonProvider, LocalProvider, Provider,
+                                  WorkerPoolProvider)
 from repro.core.restart_log import RestartLog
-from repro.core.simclock import Clock, RealClock, SimClock
+from repro.core.simclock import Clock, SimClock
 from repro.core.sites import LoadBalancer, Site
+from repro.core.task import Task, task_key
 
-_task_ids = itertools.count()
+__all__ = [
+    "Engine", "Task", "Provider", "WorkerPoolProvider", "LocalProvider",
+    "BatchSchedulerProvider", "FalkonProvider", "ClusteringProvider",
+]
 
-
-class Task:
-    __slots__ = ("id", "name", "key", "fn", "args", "output", "duration",
-                 "sim_value", "app", "attempt", "retries_left", "site",
-                 "host", "created_time", "submit_time", "start_time",
-                 "durable", "fault_check", "_falkon_done", "vmap_key",
-                 "site_failures")
-
-    def __init__(self, name: str, fn, args, output: DataFuture,
-                 duration: float | None, app: str | None,
-                 retries: int, durable: bool, key: str):
-        self.id = next(_task_ids)
-        self.name = name
-        self.key = key
-        self.fn = fn
-        self.args = args
-        self.output = output
-        self.duration = duration
-        self.sim_value = None
-        self.app = app
-        self.attempt = 0
-        self.retries_left = retries
-        self.site: Optional[Site] = None
-        self.host = ""
-        self.created_time = 0.0
-        self.submit_time = 0.0
-        self.start_time = 0.0
-        self.durable = durable
-        self.fault_check = None
-        self.vmap_key = None
-        self.site_failures: dict = {}
-
-
-# ---------------------------------------------------------------------------
-# providers
-# ---------------------------------------------------------------------------
-
-class Provider:
-    name = "provider"
-
-    def submit(self, task: Task, when_done: Callable) -> None:
-        raise NotImplementedError
-
-
-class LocalProvider(Provider):
-    """Immediate local execution (the paper's local-host provider)."""
-
-    name = "local"
-
-    def __init__(self, clock: Clock, concurrency: int = 1):
-        self.clock = clock
-        self.concurrency = concurrency
-        self._running = 0
-        self._queue: deque = deque()
-
-    def submit(self, task: Task, when_done: Callable) -> None:
-        self._queue.append((task, when_done))
-        self._pump()
-
-    def _pump(self):
-        while self._queue and self._running < self.concurrency:
-            task, when_done = self._queue.popleft()
-            self._running += 1
-            task.start_time = self.clock.now()
-
-            def fin(task=task, when_done=when_done):
-                ok, value, err = falkon_mod._execute(task)
-                self._running -= 1
-                when_done(ok, value, err)
-                self._pump()
-
-            self.clock.schedule(falkon_mod._sim_duration(task), fin)
-
-
-class BatchSchedulerProvider(Provider):
-    """Simulated conventional batch scheduler (PBS / Condor).
-
-    Models the paper's measured behavior: a serial job-submission throttle
-    (GRAM gateway: ~1/5 jobs/s in §5.4.3; PBS ~1-2 jobs/s in Fig 12) plus a
-    per-job scheduler latency, over a fixed node pool.
-    """
-
-    name = "batch"
-
-    def __init__(self, clock: Clock, nodes: int, submit_rate: float = 1.0,
-                 sched_latency: float = 60.0):
-        self.clock = clock
-        self.nodes = nodes
-        self.submit_interval = 1.0 / submit_rate
-        self.sched_latency = sched_latency
-        self._busy = 0
-        self._queue: deque = deque()
-        self._gateway_free_at = 0.0
-
-    def submit(self, task: Task, when_done: Callable) -> None:
-        now = self.clock.now()
-        # serial submission gateway (throttled)
-        gate = max(now, self._gateway_free_at)
-        self._gateway_free_at = gate + self.submit_interval
-        delay = (gate - now) + self.sched_latency
-
-        def queued():
-            self._queue.append((task, when_done))
-            self._pump()
-
-        self.clock.schedule(delay, queued)
-
-    def _pump(self):
-        while self._queue and self._busy < self.nodes:
-            task, when_done = self._queue.popleft()
-            self._busy += 1
-            task.start_time = self.clock.now()
-
-            def fin(task=task, when_done=when_done):
-                ok, value, err = falkon_mod._execute(task)
-                self._busy -= 1
-                when_done(ok, value, err)
-                self._pump()
-
-            self.clock.schedule(falkon_mod._sim_duration(task), fin)
-
-
-class FalkonProvider(Provider):
-    name = "falkon"
-
-    def __init__(self, service: falkon_mod.FalkonService):
-        self.service = service
-
-    def submit(self, task: Task, when_done: Callable) -> None:
-        self.service.submit(task, when_done)
-
-
-class ClusteringProvider(Provider):
-    """Dynamic clustering (§3.13): accumulate ready tasks for a clustering
-    window, then submit them as one bundle paying one per-job overhead.
-    No prior knowledge of the workflow graph is needed."""
-
-    name = "clustering"
-
-    def __init__(self, clock: Clock, inner: Provider, window: float = 1.0,
-                 bundle_size: int = 8):
-        self.clock = clock
-        self.inner = inner
-        self.window = window
-        self.bundle_size = bundle_size
-        self._pending: list = []
-        self._flush_scheduled = False
-
-    def submit(self, task: Task, when_done: Callable) -> None:
-        self._pending.append((task, when_done))
-        if len(self._pending) >= self.bundle_size:
-            self._flush()
-        elif not self._flush_scheduled:
-            self._flush_scheduled = True
-            self.clock.schedule(self.window, self._window_flush)
-
-    def _window_flush(self):
-        self._flush_scheduled = False
-        if self._pending:
-            self._flush()
-
-    def _flush(self):
-        bundle, self._pending = self._pending[:self.bundle_size], \
-            self._pending[self.bundle_size:]
-        if not bundle:
-            return
-        tasks = [t for t, _ in bundle]
-        total = sum(falkon_mod._sim_duration(t) for t in tasks)
-
-        def run_bundle(*_):
-            results = []
-            for t, _cb in bundle:
-                ok, value, err = falkon_mod._execute(t)
-                results.append((ok, value, err))
-            return results
-
-        meta = Task(name=f"bundle[{len(bundle)}]", fn=run_bundle, args=[],
-                    output=DataFuture(), duration=total, app=tasks[0].app,
-                    retries=0, durable=False, key="")
-        meta.fault_check = None
-
-        def done(ok, results, err):
-            if not ok or results is None:
-                for _t, cb in bundle:
-                    cb(False, None, err or TaskFailure("bundle failed"))
-                return
-            for (t, cb), (ok_i, v_i, e_i) in zip(bundle, results):
-                cb(ok_i, v_i, e_i)
-
-        self.inner.submit(meta, done)
-        if self._pending:
-            self._flush()
-
-
-# ---------------------------------------------------------------------------
-# the engine
-# ---------------------------------------------------------------------------
 
 class Engine:
     def __init__(self, clock: Clock | None = None,
                  retry_policy: RetryPolicy | None = None,
                  vdc: VDC | None = None,
                  restart_log: RestartLog | None = None,
-                 fault_injector: FaultInjector | None = None):
+                 fault_injector: FaultInjector | None = None,
+                 provenance: str = "records"):
         self.clock = clock or SimClock()
         self.retry_policy = retry_policy or RetryPolicy()
         self.vdc = vdc or VDC()
@@ -252,6 +62,13 @@ class Engine:
         # scores steer the split — paper §3.13)
         self.site_slack = 2.0
         self._pending: deque = deque()
+        self._drain_scheduled = False
+        # provenance="summary" keeps the VDC aggregate counters but skips
+        # per-invocation records — required for bounded-memory 10^6-task runs
+        if provenance not in ("records", "summary"):
+            raise ValueError(f"provenance must be records|summary, "
+                             f"got {provenance!r}")
+        self._prov_records = provenance == "records"
 
     # ------------------------------------------------------------------
     def add_site(self, name: str, provider: Provider, capacity: int = 1,
@@ -274,9 +91,15 @@ class Engine:
         out = DataFuture(name=name)
         if key is None:
             # dataflow-stable keys are only needed for restart-log lookups;
-            # skip the fingerprint hash on the hot path otherwise
-            key = self._task_key(name, args) if self.restart_log is not None \
-                else f"{name}#{self.tasks_submitted}"
+            # skip the fingerprint hash on the hot path otherwise, and in
+            # summary-provenance mode (no stored records reference the key)
+            # skip even the counter suffix
+            if self.restart_log is not None:
+                key = task_key(name, args)
+            elif self._prov_records:
+                key = f"{name}#{self.tasks_submitted}"
+            else:
+                key = name
         out.name = key
 
         # restart log: datasets already produced are marked available and
@@ -301,69 +124,85 @@ class Engine:
             task.fault_check = chk
         self.tasks_submitted += 1
         futs = [a for a in args if isinstance(a, DataFuture)]
-        when_all(futs, lambda: self._ready(task))
+        if not futs:
+            self._dispatch(task)
+        elif len(futs) == 1:
+            # single dependency (serial chains): skip the when_all counter
+            futs[0].on_done(lambda _f: self._ready(task))
+        else:
+            when_all(futs, lambda: self._ready(task))
         return out
-
-    def _task_key(self, name: str, args: list) -> str:
-        parts = [name]
-        for a in args:
-            if isinstance(a, DataFuture):
-                parts.append(f"f:{a.name or a.id}")
-            elif hasattr(a, "shape") and hasattr(a, "dtype"):
-                # arrays: cheap structural fingerprint (repr would format
-                # the whole buffer)
-                parts.append(f"arr:{a.shape}:{a.dtype}:{id(a)}")
-            else:
-                parts.append(repr(a))
-        import hashlib
-        return name + "#" + hashlib.sha1("|".join(parts).encode()).hexdigest()[:12]
 
     # ------------------------------------------------------------------
     def _ready(self, task: Task):
-        failed = [a for a in task.args
-                  if isinstance(a, DataFuture) and a.failed]
-        if failed:
-            task.output.set_error(
-                TaskFailure(f"upstream failure for {task.name}"))
-            self.tasks_failed += 1
-            return
+        for a in task.args:
+            if isinstance(a, DataFuture) and a.failed:
+                task.output.set_error(
+                    TaskFailure(f"upstream failure for {task.name}"))
+                self.tasks_failed += 1
+                return
         self._dispatch(task)
 
     def _dispatch(self, task: Task, exclude_site: str | None = None):
+        if not self._place(task, exclude_site):
+            # every valid site is at its throttle: hold in the ready queue
+            self._pending.append((task, exclude_site))
+
+    def _place(self, task: Task, exclude_site: str | None = None) -> bool:
+        """Try to hand the task to a site; False means *hold* (valid sites
+        exist but all are throttled or suspended)."""
+        cands = self.balancer.sites_for(task.app)
+        if not cands:
+            task.output.set_error(TaskFailure(f"no site for {task.name}"))
+            self.tasks_failed += 1
+            return True  # consumed (failed), not held
         now = self.clock.now()
         # throttle only matters when there is a choice to steer: with a
         # single site the provider's own queue is the right place to wait
-        multi = sum(1 for s in self.balancer.sites
-                    if s.valid_for(task.app)) > 1
-        site = self.balancer.pick(task.app, now, require_room=multi,
+        site = self.balancer.pick(task.app, now,
+                                  require_room=len(cands) > 1,
                                   slack=self.site_slack)
-        if site is None and self.balancer.any_valid(task.app):
-            # every valid site is at its throttle: hold in the ready queue
-            self._pending.append((task, exclude_site))
-            return
-        if site is not None and site.name == exclude_site:
-            for s in self.balancer.sites:
-                if s.name != exclude_site and s.valid_for(task.app):
+        if site is None:
+            return False
+        if site.name == exclude_site:
+            for s in cands:
+                if s.name != exclude_site and now >= s.suspended_until:
                     site = s
                     break
-        if site is None:
-            task.output.set_error(TaskFailure(f"no site for {task.name}"))
-            self.tasks_failed += 1
-            return
         task.site = site
-        task.submit_time = self.clock.now()
+        task.submit_time = now
         site.outstanding += 1
         site.stats.submitted += 1
         site.provider.submit(
             task, lambda ok, v, e: self._done(task, ok, v, e))
+        return True
+
+    def _drain_pending(self):
+        """Batched drain: after completions free capacity, dispatch *every*
+        pending task that now has room, in one pass.  The seed engine popped
+        a single task per completion, which both cost one clock event per
+        task and head-of-line-blocked apps whose site had no room."""
+        self._drain_scheduled = False
+        pending = self._pending
+        blocked: set = set()
+        held: list = []
+        for _ in range(len(pending)):
+            task, excl = pending.popleft()
+            if task.app in blocked:
+                held.append((task, excl))
+            elif not self._place(task, excl):
+                blocked.add(task.app)
+                held.append((task, excl))
+        if held:
+            pending.extendleft(reversed(held))
 
     def _done(self, task: Task, ok: bool, value, err):
         site = task.site
         now = self.clock.now()
         site.outstanding -= 1
-        if self._pending:
-            nxt, excl = self._pending.popleft()
-            self.clock.schedule(0.0, lambda: self._dispatch(nxt, excl))
+        if self._pending and not self._drain_scheduled:
+            self._drain_scheduled = True
+            self.clock.schedule(0.0, self._drain_pending)
         if ok:
             site.on_success(now - task.submit_time)
             self.tasks_completed += 1
@@ -374,7 +213,10 @@ class Engine:
             return
         # failure path (§3.12)
         site.on_failure()
-        task.site_failures[site.name] = task.site_failures.get(site.name, 0) + 1
+        failures = task.site_failures
+        if failures is None:
+            failures = task.site_failures = {}
+        failures[site.name] = failures.get(site.name, 0) + 1
         self._record(task, "retried" if task.retries_left > 0 else "failed",
                      error=str(err))
         if task.retries_left <= 0:
@@ -385,18 +227,24 @@ class Engine:
         task.attempt += 1
         exclude = None
         kind = getattr(err, "kind", "transient")
-        if (kind == "site" or task.site_failures[site.name]
+        if (kind == "site" or failures[site.name]
                 >= self.retry_policy.site_fail_threshold):
             exclude = site.name  # reschedule at a different site
         self.clock.schedule(self.retry_policy.backoff,
                             lambda: self._dispatch(task, exclude_site=exclude))
 
     def _record(self, task: Task, status: str, error: str = ""):
+        now = self.clock.now()
+        if not self._prov_records:
+            self.vdc.tally(status == "ok",
+                           task.start_time - task.submit_time,
+                           now - task.start_time)
+            return
         self.vdc.record(InvocationRecord(
             task_id=str(task.id), name=task.name,
             site=task.site.name if task.site else "",
             host=task.host, submit_time=task.submit_time,
-            start_time=task.start_time, end_time=self.clock.now(),
+            start_time=task.start_time, end_time=now,
             exit_status=status, attempt=task.attempt,
             args_repr="", outputs=[task.output.name], error=error))
 

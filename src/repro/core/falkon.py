@@ -6,14 +6,30 @@ dispatch* (streamlined, O(1), ~ms per task).  Executors register with the
 service; queued tasks are dispatched to idle executors; DRP grows/shrinks the
 pool on queue pressure; hosts with repeated failures are suspended
 ("stale NFS handle" handling, §3.12).
+
+Scale behavior (DESIGN.md §2/§4): per-task dispatch cost is O(1) in both
+queue depth and pool size — the idle-executor pool is a deque, the DRP
+shrink sweep is amortized over the idle timeout instead of scanning every
+executor on every completion, and metrics are bounded `StreamStat`
+summaries.  Construct the service with ``trace=True`` to additionally keep
+the full per-event logs (`queue_len_log`, `alloc_log`, per-executor
+`task_log`) that the Fig-18-style benchmark views need; traces grow with
+task count and are therefore off by default.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
+from repro.core.metrics import StreamStat
 from repro.core.simclock import Clock
+from repro.core.task import execute_task, sim_duration
+
+# compat aliases — the seed exposed these as falkon-private helpers and
+# other modules imported them from here
+_execute = execute_task
+_sim_duration = sim_duration
 
 
 @dataclasses.dataclass
@@ -49,26 +65,30 @@ class Executor:
         self.busy_time = 0.0
         self.tasks_done = 0
         self.registered_at = now
-        self.task_log: list = []   # (start, end) per task, for Fig 18 views
+        self.task_log: list = []   # (start, end) per task; trace mode only
 
 
 class FalkonService:
     """Web-services interface -> in-process API (see DESIGN.md §2)."""
 
     def __init__(self, clock: Clock, config: FalkonConfig | None = None,
-                 name: str = "falkon"):
+                 name: str = "falkon", trace: bool = False):
         self.clock = clock
         self.cfg = config or FalkonConfig()
         self.name = name
+        self.trace = trace
         self.queue: deque = deque()
         self.executors: list[Executor] = []
         self._idle: deque = deque()   # O(1) dispatch: idle-executor pool
         self._next_eid = 0
         self._allocating = 0
-        self._dispatch_busy_until = 0.0
-        # metrics
+        self._last_shrink_scan = float("-inf")
+        # metrics — bounded summaries always on; raw logs only under trace
         self.peak_queue = 0
         self.dispatched = 0
+        self.tasks_finished = 0
+        self.queue_stat = StreamStat(cap=512)   # queue length per pump
+        self.alloc_stat = StreamStat(cap=256)   # executors per allocation
         self.queue_len_log: list = []
         self.alloc_log: list = []
 
@@ -85,7 +105,10 @@ class FalkonService:
         if n <= 0:
             return
         self._allocating += n
-        self.alloc_log.append((self.clock.now(), n))
+        now = self.clock.now()
+        self.alloc_stat.observe(now, n)
+        if self.trace:
+            self.alloc_log.append((now, n))
 
         def arrive():
             self._allocating -= n
@@ -110,13 +133,21 @@ class FalkonService:
 
     def _maybe_shrink(self):
         d = self.cfg.drp
+        # amortized O(1): nothing can be idle past the timeout while the
+        # queue is non-empty, and a full pool scan at most once per half
+        # timeout — the seed scanned every executor on every completion,
+        # making per-task cost O(pool size)
+        if self.queue or len(self.executors) <= d.min_executors:
+            return
         now = self.clock.now()
+        if now - self._last_shrink_scan < d.idle_timeout * 0.5:
+            return
+        self._last_shrink_scan = now
         drop = set()
         for e in self.executors:
             if (not e.busy and len(self.executors) - len(drop) >
                     d.min_executors
-                    and now - e.idle_since > d.idle_timeout
-                    and not self.queue):
+                    and now - e.idle_since > d.idle_timeout):
                 drop.add(e.id)  # de-register (paper: idle auto-deregistration)
         if drop:
             self.executors = [e for e in self.executors if e.id not in drop]
@@ -129,11 +160,21 @@ class FalkonService:
         task._falkon_done = when_done
         task.submit_time = self.clock.now()
         self.queue.append(task)
-        self.peak_queue = max(self.peak_queue, len(self.queue))
+        if len(self.queue) > self.peak_queue:
+            self.peak_queue = len(self.queue)
         self._maybe_grow()
         self._pump()
 
     def _idle_executor(self) -> Optional[Executor]:
+        idle = self._idle
+        if not idle:
+            return None
+        # fast path: head of the pool is usable (the overwhelmingly common
+        # case — suspensions and stale entries are failure-path artifacts)
+        e = idle[0]
+        if not e.busy and self.clock.now() >= e.suspended_until:
+            idle.popleft()
+            return e
         now = self.clock.now()
         skipped = []
         found = None
@@ -154,13 +195,15 @@ class FalkonService:
         return found
 
     def _pump(self):
-        now = self.clock.now()
-        self.queue_len_log.append((now, len(self.queue)))
-        while self.queue:
+        queue = self.queue
+        self.queue_stat.observe(self.clock.now(), len(queue))
+        if self.trace:
+            self.queue_len_log.append((self.clock.now(), len(queue)))
+        while queue:
             e = self._idle_executor()
             if e is None:
                 break
-            task = self.queue.popleft()
+            task = queue.popleft()
             self._dispatch(e, task)
 
     def _dispatch(self, e: Executor, task):
@@ -172,9 +215,11 @@ class FalkonService:
         task.host = e.host
 
         def finish():
-            ok, value, err = _execute(task)
+            ok, value, err = execute_task(task)
             end = self.clock.now()
-            e.task_log.append((start, end))
+            if self.trace:
+                e.task_log.append((start, end))
+            self.tasks_finished += 1
             e.busy = False
             e.idle_since = end
             e.busy_time += max(0.0, end - start)
@@ -188,11 +233,15 @@ class FalkonService:
                     e.suspended_until = end + self.cfg.host_suspend_time
                     e.consec_failures = 0
             self._idle.append(e)
-            task._falkon_done(ok, value, err)
+            # break the task -> callback -> task reference cycle so
+            # completed tasks are freed by refcounting, not the cycle GC
+            callback = task._falkon_done
+            task._falkon_done = None
+            callback(ok, value, err)
             self._maybe_shrink()
             self._pump()
 
-        self.clock.schedule(overhead + _sim_duration(task), finish)
+        self.clock.schedule(overhead + sim_duration(task), finish)
 
     # ------------------------------------------------------------------
     def utilization(self) -> dict:
@@ -208,25 +257,14 @@ class FalkonService:
             "efficiency": total_busy / total_alive if total_alive else 0.0,
         }
 
-
-def _sim_duration(task) -> float:
-    d = getattr(task, "duration", None)
-    return float(d) if d else 0.0
-
-
-def _execute(task):
-    chk = getattr(task, "fault_check", None)
-    if chk is not None:
-        try:
-            chk(task)
-        except BaseException as err:  # noqa: BLE001
-            return False, None, err
-    fn = getattr(task, "fn", None)
-    if fn is None:
-        return True, getattr(task, "sim_value", None), None
-    try:
-        args = [a.get() if hasattr(a, "get") and hasattr(a, "on_done") else a
-                for a in task.args]
-        return True, fn(*args), None
-    except BaseException as err:  # noqa: BLE001 - engine handles retries
-        return False, None, err
+    def metrics(self) -> dict:
+        """Bounded metrics snapshot — safe at any task count."""
+        return {
+            "dispatched": self.dispatched,
+            "finished": self.tasks_finished,
+            "peak_queue": self.peak_queue,
+            "queue": self.queue_stat.summary(),
+            "allocations": self.alloc_stat.count,
+            "executors_acquired": self.alloc_stat.total,
+            "executors": len(self.executors),
+        }

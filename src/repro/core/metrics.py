@@ -1,0 +1,66 @@
+"""Bounded streaming metrics for million-task runs (DESIGN.md §4).
+
+The seed implementation appended one log entry per task to plain lists
+(`queue_len_log`, `alloc_log`, per-executor `task_log`), so a 10^6-task run
+grew tens of millions of tuples.  `StreamStat` replaces those with O(1)
+rolling counters (count / total / peak / last) plus a fixed-size,
+deterministic reservoir: observations are kept every `stride`-th sample and
+when the reservoir fills, every other kept sample is dropped and the stride
+doubles.  Memory is bounded by `cap` regardless of run length, and the
+decimation is reproducible under `SimClock` (no RNG).
+"""
+from __future__ import annotations
+
+
+class StreamStat:
+    """Rolling summary of a (time, value) series with a bounded sample."""
+
+    __slots__ = ("cap", "count", "total", "peak", "last", "sample",
+                 "_stride", "_skip")
+
+    def __init__(self, cap: int = 512):
+        if cap < 2:
+            raise ValueError("cap must be >= 2")
+        self.cap = cap
+        self.count = 0
+        self.total = 0.0
+        self.peak: float | None = None
+        self.last: float | None = None
+        self.sample: list[tuple[float, float]] = []
+        self._stride = 1
+        self._skip = 0
+
+    def observe(self, t: float, v: float) -> None:
+        self.count += 1
+        self.total += v
+        if self.peak is None or v > self.peak:
+            self.peak = v
+        self.last = v
+        if self._skip:
+            self._skip -= 1
+            return
+        self.sample.append((t, v))
+        if len(self.sample) >= self.cap:
+            # decimate: drop every other sample, keeping the first so the
+            # series origin stays anchored
+            del self.sample[1::2]
+            self._stride *= 2
+        self._skip = self._stride - 1
+
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "total": self.total,
+            "mean": self.mean(),
+            "peak": self.peak,
+            "last": self.last,
+            "samples_kept": len(self.sample),
+            "sample_stride": self._stride,
+        }
+
+    def __repr__(self):
+        return (f"<StreamStat n={self.count} mean={self.mean():.3g} "
+                f"peak={self.peak} kept={len(self.sample)}>")

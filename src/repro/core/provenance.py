@@ -11,6 +11,7 @@ import dataclasses
 import json
 import os
 import socket
+from collections import deque
 from typing import Any
 
 
@@ -39,15 +40,38 @@ class InvocationRecord:
 
 
 class VDC:
-    """Virtual data catalog: invocation records + produced-dataset registry."""
+    """Virtual data catalog: invocation records + produced-dataset registry.
 
-    def __init__(self, path: str | None = None):
-        self.records: list[InvocationRecord] = []
+    Aggregate counters (invocations / ok / queue and run time) are always
+    maintained, so `summary()` stays exact even when per-invocation records
+    are bounded (``max_records=N`` keeps only the N most recent) or skipped
+    entirely (engine ``provenance="summary"`` calls `tally` instead of
+    `record`) — the memory-bounded configuration for 10^6-task runs.
+    """
+
+    def __init__(self, path: str | None = None,
+                 max_records: int | None = None):
+        self.records = [] if max_records is None \
+            else deque(maxlen=max_records)
         self.datasets: dict[str, dict] = {}
         self.path = path
         self.host = socket.gethostname()
+        self._invocations = 0
+        self._ok = 0
+        self._queue_time = 0.0
+        self._run_time = 0.0
+
+    def tally(self, ok: bool, queue_time: float = 0.0,
+              run_time: float = 0.0) -> None:
+        """Count an invocation without materializing a record."""
+        self._invocations += 1
+        if ok:
+            self._ok += 1
+        self._queue_time += queue_time
+        self._run_time += run_time
 
     def record(self, rec: InvocationRecord) -> None:
+        self.tally(rec.exit_status == "ok", rec.queue_time, rec.run_time)
         self.records.append(rec)
         if self.path:
             with open(self.path, "a") as f:
@@ -76,11 +100,10 @@ class VDC:
         return {"dataset": dataset, "chain": chain}
 
     def summary(self) -> dict:
-        ok = [r for r in self.records if r.exit_status == "ok"]
         return {
-            "invocations": len(self.records),
-            "ok": len(ok),
-            "failed": len(self.records) - len(ok),
-            "total_queue_time": sum(r.queue_time for r in self.records),
-            "total_run_time": sum(r.run_time for r in self.records),
+            "invocations": self._invocations,
+            "ok": self._ok,
+            "failed": self._invocations - self._ok,
+            "total_queue_time": self._queue_time,
+            "total_run_time": self._run_time,
         }

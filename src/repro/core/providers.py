@@ -1,0 +1,187 @@
+"""Execution providers (paper §3.11) — the middle layer of the scheduler.
+
+Providers implement the abstract provider interface: `submit(task,
+when_done)` with `when_done(ok, value, error)` called exactly once per
+submission.  The two pool-shaped providers (local host, simulated batch
+scheduler) share `WorkerPoolProvider`, which owns the run queue / slot
+accounting that the seed duplicated in both classes:
+
+  * LocalProvider           — run on the submit host
+  * BatchSchedulerProvider  — simulated PBS/Condor: serial submission rate +
+                              scheduler latency + node pool (the GRAM+PBS
+                              baseline of Figs 6/12/13/14)
+  * FalkonProvider          — the Falkon service (multi-level scheduling)
+  * ClusteringProvider      — wraps any provider, bundling small tasks within
+                              a clustering window (§3.13)
+"""
+from __future__ import annotations
+
+from collections import deque
+from functools import partial
+from typing import TYPE_CHECKING, Callable
+
+from repro.core.faults import TaskFailure
+from repro.core.futures import DataFuture
+from repro.core.simclock import Clock
+from repro.core.task import Task, execute_task, sim_duration
+
+if TYPE_CHECKING:
+    from repro.core.falkon import FalkonService
+
+
+class Provider:
+    name = "provider"
+
+    def submit(self, task: Task, when_done: Callable) -> None:
+        raise NotImplementedError
+
+
+class WorkerPoolProvider(Provider):
+    """Shared worker-pool core: a FIFO run queue drained into a fixed number
+    of execution slots.
+
+    Subclasses control *admission* (when a submitted task reaches the run
+    queue — immediately for the local host, after a gateway throttle plus
+    scheduler latency for a batch system).  Draining is O(1) per task: each
+    completion frees one slot and pulls the queue head; no scans.
+    """
+
+    name = "pool"
+
+    def __init__(self, clock: Clock, slots: int):
+        self.clock = clock
+        self.slots = slots
+        self._running = 0
+        self._queue: deque = deque()
+
+    # admission policy — subclasses may delay this
+    def submit(self, task: Task, when_done: Callable) -> None:
+        self._admit(task, when_done)
+
+    def _admit(self, task: Task, when_done: Callable) -> None:
+        self._queue.append((task, when_done))
+        self._pump()
+
+    def _pump(self) -> None:
+        queue = self._queue
+        clock = self.clock
+        while queue and self._running < self.slots:
+            task, when_done = queue.popleft()
+            self._running += 1
+            task.start_time = clock.now()
+            clock.schedule(sim_duration(task),
+                           partial(self._finish, task, when_done))
+
+    def _finish(self, task: Task, when_done: Callable) -> None:
+        ok, value, err = execute_task(task)
+        self._running -= 1
+        when_done(ok, value, err)
+        self._pump()
+
+
+class LocalProvider(WorkerPoolProvider):
+    """Immediate local execution (the paper's local-host provider)."""
+
+    name = "local"
+
+    def __init__(self, clock: Clock, concurrency: int = 1):
+        super().__init__(clock, concurrency)
+
+
+class BatchSchedulerProvider(WorkerPoolProvider):
+    """Simulated conventional batch scheduler (PBS / Condor).
+
+    Models the paper's measured behavior: a serial job-submission throttle
+    (GRAM gateway: ~1/5 jobs/s in §5.4.3; PBS ~1-2 jobs/s in Fig 12) plus a
+    per-job scheduler latency, over a fixed node pool.
+    """
+
+    name = "batch"
+
+    def __init__(self, clock: Clock, nodes: int, submit_rate: float = 1.0,
+                 sched_latency: float = 60.0):
+        super().__init__(clock, nodes)
+        self.submit_interval = 1.0 / submit_rate
+        self.sched_latency = sched_latency
+        self._gateway_free_at = 0.0
+
+    def submit(self, task: Task, when_done: Callable) -> None:
+        now = self.clock.now()
+        # serial submission gateway (throttled)
+        gate = max(now, self._gateway_free_at)
+        self._gateway_free_at = gate + self.submit_interval
+        delay = (gate - now) + self.sched_latency
+        self.clock.schedule(delay, partial(self._admit, task, when_done))
+
+
+class FalkonProvider(Provider):
+    name = "falkon"
+
+    def __init__(self, service: "FalkonService"):
+        self.service = service
+
+    def submit(self, task: Task, when_done: Callable) -> None:
+        self.service.submit(task, when_done)
+
+
+class ClusteringProvider(Provider):
+    """Dynamic clustering (§3.13): accumulate ready tasks for a clustering
+    window, then submit them as one bundle paying one per-job overhead.
+    No prior knowledge of the workflow graph is needed."""
+
+    name = "clustering"
+
+    def __init__(self, clock: Clock, inner: Provider, window: float = 1.0,
+                 bundle_size: int = 8):
+        self.clock = clock
+        self.inner = inner
+        self.window = window
+        self.bundle_size = bundle_size
+        self._pending: deque = deque()
+        self._flush_scheduled = False
+
+    def submit(self, task: Task, when_done: Callable) -> None:
+        self._pending.append((task, when_done))
+        if len(self._pending) >= self.bundle_size:
+            self._flush()
+        elif not self._flush_scheduled:
+            self._flush_scheduled = True
+            self.clock.schedule(self.window, self._window_flush)
+
+    def _window_flush(self):
+        self._flush_scheduled = False
+        if self._pending:
+            self._flush()
+
+    def _flush(self):
+        pending = self._pending
+        bundle = [pending.popleft()
+                  for _ in range(min(self.bundle_size, len(pending)))]
+        if not bundle:
+            return
+        tasks = [t for t, _ in bundle]
+        total = sum(sim_duration(t) for t in tasks)
+
+        def run_bundle(*_):
+            results = []
+            for t, _cb in bundle:
+                ok, value, err = execute_task(t)
+                results.append((ok, value, err))
+            return results
+
+        meta = Task(name=f"bundle[{len(bundle)}]", fn=run_bundle, args=[],
+                    output=DataFuture(), duration=total, app=tasks[0].app,
+                    retries=0, durable=False, key="")
+        meta.fault_check = None
+
+        def done(ok, results, err):
+            if not ok or results is None:
+                for _t, cb in bundle:
+                    cb(False, None, err or TaskFailure("bundle failed"))
+                return
+            for (t, cb), (ok_i, v_i, e_i) in zip(bundle, results):
+                cb(ok_i, v_i, e_i)
+
+        self.inner.submit(meta, done)
+        if self._pending:
+            self._flush()

@@ -39,9 +39,12 @@ class SimClock(Clock):
                                     next(self._seq), fn))
 
     def run(self) -> None:
-        while self._heap:
-            t, _, fn = heapq.heappop(self._heap)
-            self._now = max(self._now, t)
+        heap = self._heap
+        pop = heapq.heappop
+        while heap:
+            t, _, fn = pop(heap)
+            if t > self._now:
+                self._now = t
             fn()
 
 

@@ -49,19 +49,37 @@ class Site:
 
 
 class LoadBalancer:
-    """Pick the valid site with the largest score-weighted free capacity."""
+    """Pick the valid site with the largest score-weighted free capacity.
+
+    Site candidates are served from a per-app index so per-task dispatch
+    does not rescan every registered site (the seed's `pick` and the
+    engine's multi-site check were both O(sites) per task).  The index is
+    rebuilt lazily after `add_site`; a site's `apps` set is treated as
+    fixed once the site is registered.
+    """
 
     def __init__(self, sites: list[Site]):
-        self.sites = sites
+        self.sites = list(sites)
+        self._by_app: dict = {}
 
     def add_site(self, site: Site):
         self.sites.append(site)
+        self._by_app.clear()
+
+    def sites_for(self, app: str | None) -> list[Site]:
+        """Valid sites for an app (cached; app cardinality is workflow-level
+        and small, so the cache is bounded)."""
+        cands = self._by_app.get(app)
+        if cands is None:
+            cands = [s for s in self.sites if s.valid_for(app)]
+            self._by_app[app] = cands
+        return cands
 
     def pick(self, app: str | None, now: float,
              require_room: bool = False, slack: float = 2.0) -> Optional[Site]:
         best, best_w = None, -1.0
-        for s in self.sites:
-            if not s.valid_for(app) or now < s.suspended_until:
+        for s in self.sites_for(app):
+            if now < s.suspended_until:
                 continue
             if require_room and s.outstanding >= s.capacity * slack:
                 continue
@@ -74,4 +92,4 @@ class LoadBalancer:
         return best
 
     def any_valid(self, app: str | None) -> bool:
-        return any(s.valid_for(app) for s in self.sites)
+        return bool(self.sites_for(app))

@@ -1,0 +1,103 @@
+"""Task records, dataflow keying, and task-body execution.
+
+Lowest layer of the scheduler stack (see DESIGN.md §1): a task is a
+lightweight record — no OS thread, Karajan-style — carrying its callable,
+argument futures, output future, and retry/provenance bookkeeping.  Both the
+engine and every provider operate on these records; execution of the body
+(`execute_task`) and simulated-duration lookup (`sim_duration`) live here so
+providers and the Falkon service share one implementation.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+from typing import Optional
+
+from repro.core.futures import DataFuture
+
+_task_ids = itertools.count()
+
+
+class Task:
+    __slots__ = ("id", "name", "key", "fn", "args", "output", "duration",
+                 "sim_value", "app", "attempt", "retries_left", "site",
+                 "host", "created_time", "submit_time", "start_time",
+                 "durable", "fault_check", "_falkon_done", "vmap_key",
+                 "site_failures")
+
+    def __init__(self, name: str, fn, args, output: DataFuture,
+                 duration: float | None, app: str | None,
+                 retries: int, durable: bool, key: str):
+        self.id = next(_task_ids)
+        self.name = name
+        self.key = key
+        self.fn = fn
+        self.args = args
+        self.output = output
+        self.duration = duration
+        self.sim_value = None
+        self.app = app
+        self.attempt = 0
+        self.retries_left = retries
+        self.site = None
+        self.host = ""
+        self.created_time = 0.0
+        self.submit_time = 0.0
+        self.start_time = 0.0
+        self.durable = durable
+        self.fault_check = None
+        self.vmap_key = None
+        # lazily allocated on first failure: a dict per task is measurable
+        # overhead at 10^6 tasks and almost all tasks never fail
+        self.site_failures: Optional[dict] = None
+
+
+def task_key(name: str, args: list) -> str:
+    """Dataflow-stable key for restart-log lookups (paper §3.12).
+
+    Derived from the task name and the *identity* of its inputs (future
+    names, array fingerprints, literal reprs) — not from graph position — so
+    a modified-and-restarted program still resolves unchanged flows.
+    """
+    parts = [name]
+    for a in args:
+        if isinstance(a, DataFuture):
+            parts.append(f"f:{a.name or a.id}")
+        elif hasattr(a, "shape") and hasattr(a, "dtype"):
+            # arrays: cheap structural fingerprint (repr would format the
+            # whole buffer)
+            parts.append(f"arr:{a.shape}:{a.dtype}:{id(a)}")
+        else:
+            parts.append(repr(a))
+    return name + "#" + hashlib.sha1("|".join(parts).encode()).hexdigest()[:12]
+
+
+def sim_duration(task) -> float:
+    d = getattr(task, "duration", None)
+    return float(d) if d else 0.0
+
+
+def execute_task(task):
+    """Run a task body, returning (ok, value, error).
+
+    Pure-simulation tasks (no callable, no fault check) take the early path:
+    they dominate the paper-figure benchmarks and must cost O(ns), not a
+    try/except plus an argument scan.
+    """
+    chk = getattr(task, "fault_check", None)
+    fn = getattr(task, "fn", None)
+    if chk is None and fn is None:
+        return True, getattr(task, "sim_value", None), None
+    if chk is not None:
+        try:
+            chk(task)
+        except BaseException as err:  # noqa: BLE001
+            return False, None, err
+    if fn is None:
+        return True, getattr(task, "sim_value", None), None
+    try:
+        args = [a.get() if hasattr(a, "get") and hasattr(a, "on_done") else a
+                for a in task.args]
+        return True, fn(*args), None
+    except BaseException as err:  # noqa: BLE001 - engine handles retries
+        return False, None, err

@@ -13,6 +13,7 @@ import dataclasses
 import jax
 from jax.sharding import Mesh, NamedSharding
 
+from repro.launch.mesh import compat_make_mesh
 from repro.models.params import default_rules, resolve_spec
 
 
@@ -37,10 +38,8 @@ def make_mesh_for_dp(dp: int, model: int = 1):
     need = dp * model
     if len(devs) < need:
         raise ValueError(f"need {need} devices, have {len(devs)}")
-    return jax.make_mesh(
-        (dp, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        devices=devs[:need])
+    return compat_make_mesh((dp, model), ("data", "model"),
+                            devices=devs[:need])
 
 
 def reshard_tree(tree, descs, mesh: Mesh, rules=None):

@@ -34,6 +34,9 @@ _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 _CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_COMP_RE = re.compile(r"true_computation=%?([\w\.\-]+)")
+_FALSE_COMP_RE = re.compile(r"false_computation=%?([\w\.\-]+)")
 _CONST_INT_RE = re.compile(r"constant\((\d+)\)")
 _TRIP_RE = re.compile(r"known_trip_count[^}]*?\"n\":\"(\d+)\"")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
@@ -296,7 +299,10 @@ class HloModule:
     def op_bytes(self, comp: str, op: _Op) -> float:
         """Approximate HBM traffic of one top-level op."""
         kind = op.kind
-        if kind in _SKIP_BYTES_OPS or kind == "while":
+        if kind in _SKIP_BYTES_OPS or kind in ("while", "call", "conditional"):
+            # ops whose called computations are walked at full cost: charging
+            # the boundary too would double-count every buffer (the CPU
+            # backend wraps whole programs in `call` computations)
             return 0.0
         if kind == "fusion":
             return self._fusion_bytes(comp, op)
@@ -357,6 +363,18 @@ class HloModule:
             return len(m.group(1).split(","))
         return 2
 
+    def _branch_comps(self, attrs: str) -> list[str]:
+        m = _BRANCHES_RE.search(attrs)
+        if m:
+            return [b.strip().lstrip("%") for b in m.group(1).split(",")
+                    if b.strip()]
+        out = []
+        for rx in (_TRUE_COMP_RE, _FALSE_COMP_RE):
+            mm = rx.search(attrs)
+            if mm:
+                out.append(mm.group(1))
+        return out
+
     def _dot_flops(self, comp: str, op: _Op) -> float:
         result_elems = _shape_elems(op.result)
         shapes = self._operand_shapes(comp, op)
@@ -392,9 +410,16 @@ class HloModule:
                     total.add(self.comp_cost(body.group(1)), trips)
                 if cond:
                     total.add(self.comp_cost(cond.group(1)), trips)
+            elif kind == "conditional":
+                # branches are referenced via branch_computations= (or
+                # true_/false_computation=), which the calls= regex never
+                # matches; walk them explicitly.  Summing all branches is an
+                # upper bound (only one executes per invocation).
+                for branch in self._branch_comps(op.attrs):
+                    total.add(self.comp_cost(branch))
             elif kind in ("call", "fusion", "map", "reduce", "reduce-window",
                           "sort", "scatter", "select-and-scatter",
-                          "conditional", "custom-call"):
+                          "custom-call"):
                 m = _CALLS_RE.search(op.attrs)
                 if m:
                     sub = self.comp_cost(m.group(1), fused=(kind == "fusion"))

@@ -4,26 +4,59 @@ A function (not a module-level constant) so importing this module never
 touches jax device state.  Single pod: 16 x 16 = 256 chips over
 ("data", "model"); multi-pod: 2 x 16 x 16 = 512 chips over
 ("pod", "data", "model").
+
+`compat_make_mesh` papers over JAX-version differences in mesh
+construction: `jax.sharding.AxisType` (and the matching `axis_types=`
+parameter of `jax.make_mesh`) only exist in newer JAX releases, and very old
+releases lack `jax.make_mesh` entirely.  Explicit Auto axis types only
+restate the historical default, so omitting them on older JAX preserves
+behavior.
 """
 from __future__ import annotations
 
+import inspect
+import math
+
 import jax
+import numpy as np
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def mesh_axis_types_supported() -> bool:
+    """True when this JAX exposes explicit mesh axis types."""
+    if getattr(jax.sharding, "AxisType", None) is None:
+        return False
+    make_mesh = getattr(jax, "make_mesh", None)
+    if make_mesh is None:
+        return False
+    return "axis_types" in inspect.signature(make_mesh).parameters
+
+
+def compat_make_mesh(shape: tuple, axis_names: tuple, *, devices=None):
+    """`jax.make_mesh` with Auto axis types where supported, graceful
+    fallback elsewhere."""
+    if devices is None:
+        devices = jax.devices()[:math.prod(shape)]
+    make_mesh = getattr(jax, "make_mesh", None)
+    if make_mesh is None:
+        # ancient JAX: build the Mesh directly
+        return jax.sharding.Mesh(
+            np.asarray(devices).reshape(shape), axis_names)
+    kwargs = {}
+    if mesh_axis_types_supported():
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(shape)
+    return make_mesh(shape, axis_names, devices=devices, **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat_make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """1-device mesh with the production axis names (smoke tests/examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return compat_make_mesh((n, 1), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

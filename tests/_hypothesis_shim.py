@@ -1,0 +1,94 @@
+"""Tiny deterministic stand-in for `hypothesis` when it is not installed.
+
+Covers exactly the subset the test suite uses — `given`, `settings`, and the
+strategies `integers`, `sampled_from`, `lists`, `floats`, `booleans`,
+`just` — by running each property test over a fixed number of samples drawn
+from a seeded RNG.  It is NOT a property-testing engine (no shrinking, no
+database, no assumptions); it exists so the suite degrades gracefully
+instead of dying at import.  Installed into `sys.modules["hypothesis"]` by
+tests/conftest.py only when the real package is missing; install the real
+one via requirements-dev.txt to get full coverage.
+"""
+from __future__ import annotations
+
+import random
+from types import SimpleNamespace
+
+_DEFAULT_EXAMPLES = 8
+# cap: the shim is a fallback smoke layer, not an exhaustive fuzzer; keep
+# suite runtime sane when the real hypothesis is absent
+_MAX_EXAMPLES_CAP = 8
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    return _Strategy(lambda rng: [elements._sample(rng)
+                                  for _ in range(rng.randint(min_size,
+                                                             max_size))])
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        def runner(*args, **kwargs):
+            # @settings may sit above @given (attribute lands on `runner`)
+            # or below it (attribute lands on the wrapped `fn`)
+            n = min(getattr(runner, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_EXAMPLES)),
+                    _MAX_EXAMPLES_CAP)
+            rng = random.Random(0)
+            for _ in range(n):
+                pos = tuple(s._sample(rng) for s in arg_strategies)
+                kws = {k: s._sample(rng) for k, s in kw_strategies.items()}
+                fn(*args, *pos, **kws, **kwargs)
+
+        # deliberately no functools.wraps: pytest must not see the wrapped
+        # function's signature, or it would demand fixtures for every
+        # strategy-supplied argument
+        runner.__name__ = getattr(fn, "__name__", "given_runner")
+        runner.__doc__ = getattr(fn, "__doc__", None)
+        runner.hypothesis = SimpleNamespace(inner_test=fn)
+        return runner
+
+    return deco
+
+
+strategies = SimpleNamespace(
+    integers=integers, floats=floats, booleans=booleans, just=just,
+    sampled_from=sampled_from, lists=lists,
+)
+
+__all__ = ["given", "settings", "strategies"]

@@ -158,13 +158,17 @@ def test_falkon_host_suspension():
 def test_drp_grows_pool_on_queue_pressure():
     clock = SimClock()
     svc = FalkonService(clock, FalkonConfig(
-        drp=DRPConfig(max_executors=16, alloc_latency=10.0, alloc_chunk=4)))
+        drp=DRPConfig(max_executors=16, alloc_latency=10.0, alloc_chunk=4)),
+        trace=True)
     eng = Engine(clock)
     eng.add_site("f", FalkonProvider(svc), capacity=16)
     outs = [eng.submit(f"t{i}", None, duration=5.0) for i in range(32)]
     eng.run()
     assert all(o.resolved for o in outs)
     assert len(svc.alloc_log) >= 2  # grew incrementally
+    # bounded allocation summary matches the full trace
+    assert svc.alloc_stat.count == len(svc.alloc_log)
+    assert svc.alloc_stat.total == sum(n for _, n in svc.alloc_log)
     assert svc.utilization()["dispatched"] == 32
 
 

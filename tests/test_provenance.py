@@ -49,7 +49,7 @@ def test_falkon_executor_task_logs_support_fig18_view():
     Fig 18 executor view."""
     clock = SimClock()
     svc = FalkonService(clock, FalkonConfig(
-        drp=DRPConfig(max_executors=4, alloc_latency=0.0)))
+        drp=DRPConfig(max_executors=4, alloc_latency=0.0)), trace=True)
     eng = Engine(clock)
     eng.add_site("f", FalkonProvider(svc), capacity=4)
     outs = [eng.submit(f"t{i}", None, duration=2.0) for i in range(12)]

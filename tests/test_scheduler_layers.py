@@ -1,0 +1,227 @@
+"""Unit tests for the layered scheduler subsystem (DESIGN.md §1):
+
+  * WorkerPoolProvider subclasses preserve FIFO ordering and the
+    concurrency cap of the seed's duplicated pool logic;
+  * the engine's batched pending-drain dispatches every unblocked task
+    after a completion and does not head-of-line-block across apps;
+  * bounded streaming metrics report the same aggregates as the full
+    per-event trace logs on a 10k-task run.
+"""
+import pytest
+
+from repro.core import (BatchSchedulerProvider, DRPConfig, Engine,
+                        FalkonConfig, FalkonProvider, FalkonService,
+                        LocalProvider, SimClock, StreamStat,
+                        WorkerPoolProvider)
+from repro.core.providers import Provider
+from repro.core.task import Task
+from repro.core.futures import DataFuture
+
+
+def _mk_task(name, duration=1.0, fn=None):
+    return Task(name, fn, [], DataFuture(name), duration, None,
+                retries=0, durable=False, key=name)
+
+
+# ---------------------------------------------------------------------------
+# WorkerPoolProvider semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda clock: LocalProvider(clock, concurrency=3),
+    lambda clock: BatchSchedulerProvider(clock, nodes=3, submit_rate=1e9,
+                                         sched_latency=0.0),
+])
+def test_worker_pool_preserves_fifo_order(make):
+    clock = SimClock()
+    prov = make(clock)
+    started, finished = [], []
+    for i in range(10):
+        t = _mk_task(f"t{i}", duration=1.0)
+        prov.submit(t, lambda ok, v, e, i=i: finished.append(i))
+    clock.run()
+    assert finished == list(range(10))
+
+
+@pytest.mark.parametrize("make,slots", [
+    (lambda clock: LocalProvider(clock, concurrency=4), 4),
+    (lambda clock: BatchSchedulerProvider(clock, nodes=4, submit_rate=1e9,
+                                          sched_latency=0.0), 4),
+])
+def test_worker_pool_respects_concurrency_cap(make, slots):
+    clock = SimClock()
+    prov = make(clock)
+    running = [0]
+    peak = [0]
+    done = []
+
+    def body(running=running, peak=peak):
+        running[0] += 1
+        peak[0] = max(peak[0], running[0])
+        return None
+
+    for i in range(16):
+        t = _mk_task(f"t{i}", duration=1.0, fn=body)
+
+        def fin(ok, v, e):
+            running[0] -= 1
+            done.append(ok)
+
+        prov.submit(t, fin)
+    clock.run()
+    assert len(done) == 16 and all(done)
+    # tasks execute at completion events; with 4 slots and equal durations,
+    # exactly 4 tasks complete per virtual second
+    assert clock.now() == pytest.approx(4.0)
+    assert prov._running == 0
+
+
+def test_worker_pool_base_is_shared():
+    """Both pool providers actually ride the shared base class."""
+    assert issubclass(LocalProvider, WorkerPoolProvider)
+    assert issubclass(BatchSchedulerProvider, WorkerPoolProvider)
+
+
+# ---------------------------------------------------------------------------
+# batched pending-drain
+# ---------------------------------------------------------------------------
+
+def test_drain_dispatches_all_unblocked_after_burst_completion():
+    """A burst of simultaneous completions frees many slots; ONE drain pass
+    must dispatch every task that now has room (the seed popped one pending
+    task per completion event)."""
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.site_slack = 1.0  # throttle at exactly `capacity` outstanding
+    # two equal sites so the multi-site throttle path (require_room) engages
+    eng.add_site("a", LocalProvider(clock, concurrency=4), capacity=4)
+    eng.add_site("b", LocalProvider(clock, concurrency=4), capacity=4)
+    outs = [eng.submit(f"t{i}", None, duration=1.0, app="main")
+            for i in range(32)]
+    assert len(eng._pending) == 32 - 8  # throttle held the rest
+    eng.run()
+    assert all(o.resolved for o in outs)
+    # 32 tasks, 8-wide site, 1s each: any single-task-per-completion
+    # stutter would stretch the makespan past 4 virtual seconds
+    assert clock.now() == pytest.approx(4.0)
+    assert not eng._pending
+
+
+def test_drain_skips_blocked_app_without_head_of_line_blocking():
+    """A completion on app-a's site must dispatch the next app-a task even
+    when older app-b tasks (whose site is still full) sit ahead of it in
+    the ready queue."""
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.site_slack = 1.0
+    eng.add_site("site_a", LocalProvider(clock, concurrency=1), capacity=1,
+                 apps={"a"})
+    eng.add_site("site_b", LocalProvider(clock, concurrency=1), capacity=1,
+                 apps={"b"})
+    # fill both sites, then queue: b, b, a   (b tasks are older)
+    first_a = eng.submit("a0", None, duration=1.0, app="a")
+    first_b = eng.submit("b0", None, duration=100.0, app="b")
+    slow_bs = [eng.submit(f"b{i}", None, duration=100.0, app="b")
+               for i in (1, 2)]
+    quick_a = eng.submit("a1", None, duration=1.0, app="a")
+    eng.run()
+    assert first_a.resolved and quick_a.resolved
+    assert first_b.resolved and all(o.resolved for o in slow_bs)
+    # a1 ran right after a0 (t=2), not after the 100s b-backlog drained
+    rec = [r for r in eng.vdc.records if r.name == "a1"]
+    assert rec and rec[0].end_time == pytest.approx(2.0)
+
+
+def test_per_app_site_index_matches_linear_scan():
+    clock = SimClock()
+    eng = Engine(clock)
+    a = eng.add_site("a", LocalProvider(clock), capacity=1, apps={"x"})
+    b = eng.add_site("b", LocalProvider(clock), capacity=1, apps={"y"})
+    c = eng.add_site("c", LocalProvider(clock), capacity=1)  # everything
+    lb = eng.balancer
+    assert lb.sites_for("x") == [a, c]
+    assert lb.sites_for("y") == [b, c]
+    assert lb.sites_for(None) == [a, b, c]
+    assert lb.sites_for("z") == [c]
+    # index invalidates on add_site
+    d = eng.add_site("d", LocalProvider(clock), capacity=1, apps={"z"})
+    assert lb.sites_for("z") == [c, d]
+
+
+# ---------------------------------------------------------------------------
+# bounded metrics vs full traces
+# ---------------------------------------------------------------------------
+
+def _run_falkon(n_tasks, trace):
+    clock = SimClock()
+    svc = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=64, alloc_latency=5.0, alloc_chunk=16)),
+        trace=trace)
+    eng = Engine(clock, provenance="records" if trace else "summary")
+    eng.add_site("f", FalkonProvider(svc), capacity=64)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(n_tasks)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    return eng, svc
+
+
+def test_bounded_metrics_match_unbounded_aggregates_10k():
+    n = 10_000
+    eng_t, svc_t = _run_falkon(n, trace=True)
+    eng_b, svc_b = _run_falkon(n, trace=False)
+
+    # trace mode populated the full logs; bounded mode kept them empty
+    assert len(svc_t.queue_len_log) > 0 and len(svc_t.alloc_log) > 0
+    assert sum(len(e.task_log) for e in svc_t.executors) == n
+    assert svc_b.queue_len_log == [] and svc_b.alloc_log == []
+    assert all(e.task_log == [] for e in svc_b.executors)
+
+    # ... but the streaming summaries agree exactly with the full traces
+    assert svc_b.dispatched == svc_t.dispatched == n
+    assert svc_b.tasks_finished == n
+    assert svc_b.peak_queue == svc_t.peak_queue
+    assert svc_b.queue_stat.count == len(svc_t.queue_len_log)
+    assert svc_b.queue_stat.peak == max(q for _, q in svc_t.queue_len_log)
+    assert svc_b.queue_stat.total == \
+        pytest.approx(sum(q for _, q in svc_t.queue_len_log))
+    assert svc_b.alloc_stat.count == len(svc_t.alloc_log)
+    assert svc_b.alloc_stat.total == sum(k for _, k in svc_t.alloc_log)
+    assert sum(e.tasks_done for e in svc_b.executors) == \
+        sum(len(e.task_log) for e in svc_t.executors)
+
+    # reservoir stays bounded and is a subset of the full trace
+    assert len(svc_b.queue_stat.sample) < svc_b.queue_stat.cap
+    trace_set = set(svc_t.queue_len_log)
+    assert all(s in trace_set for s in svc_b.queue_stat.sample)
+
+    # summary-mode provenance: same aggregate counts, no stored records
+    assert eng_b.vdc.summary()["invocations"] == \
+        eng_t.vdc.summary()["invocations"] == n
+    assert eng_b.vdc.summary()["ok"] == n
+    assert len(eng_b.vdc.records) == 0 and len(eng_t.vdc.records) == n
+    assert eng_b.vdc.summary()["total_run_time"] == \
+        pytest.approx(eng_t.vdc.summary()["total_run_time"])
+
+
+def test_stream_stat_decimation_is_bounded_and_exact():
+    s = StreamStat(cap=64)
+    n = 100_000
+    for i in range(n):
+        s.observe(float(i), float(i % 97))
+    assert s.count == n
+    assert s.total == sum(float(i % 97) for i in range(n))
+    assert s.peak == 96.0
+    assert s.last == float((n - 1) % 97)
+    assert len(s.sample) < 64
+
+
+def test_vdc_max_records_bounds_memory_but_not_counts():
+    from repro.core import VDC
+    clock = SimClock()
+    eng = Engine(clock, vdc=VDC(max_records=100))
+    eng.local_site(concurrency=8)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(500)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    assert len(eng.vdc.records) == 100       # bounded
+    assert eng.vdc.summary()["invocations"] == 500  # exact
