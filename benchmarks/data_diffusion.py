@@ -1,0 +1,243 @@
+"""Data diffusion benchmark (paper §6 future work / Falkon follow-on).
+
+Drives a locality-heavy MolDyn-shaped workload — iterative rounds, each a
+wide stage of jobs that re-read their molecule's archive plus a shared
+parameter database, with a gather barrier between rounds — through the
+Falkon service with and without the data layer's executor caches:
+
+  * ``gpfs-only`` — every input read staged from the shared filesystem
+    (a `DataLayer` with zero cache capacity: identical cost model and
+    contention, nothing retained, dispatch locality-blind);
+  * ``diffuse``   — executor-local caches + cache-aware dispatch (tasks
+    routed to holders of their inputs, affinity queues, bounded spillover).
+
+The sweep varies working-set size against the aggregate cache size
+(`executors x cache_mb`) and reproduces the three diffusion regimes:
+
+  - **cold**            round 1: first touch of every object;
+  - **cache-bound**     working set fits: archives are staged once ever
+                        (restage factor ~1, zero evictions);
+  - **capacity-bound**  working set exceeds aggregate cache: per-home
+                        eviction churn re-stages archives every round
+                        (restage factor ~rounds, evictions > molecules).
+                        Note the *hit rate* stays high in both regimes —
+                        affinity routing serves the intra-round re-reads
+                        from the home's cache either way — so restage
+                        factor and evictions, not hit rate, are the regime
+                        discriminators.
+
+Throughput is reported in *simulated* tasks/s (staging costs are
+simulated), plus wall-clock tasks/s for the engine-overhead view.
+Acceptance (ISSUE 2): once the working set fits the aggregate cache,
+diffusion sustains >= 2x the GPFS-only simulated tasks/s, with hit-rate
+and staged-bytes reported from bounded metrics.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.data_diffusion                # sweep
+  PYTHONPATH=src python -m benchmarks.data_diffusion --executors 128 \
+      --rounds 4 --json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import (DataLayer, DRPConfig, Engine, FalkonConfig,
+                        FalkonProvider, FalkonService, SharedStore, SimClock,
+                        StagingCostModel, Workflow)
+
+from benchmarks.common import save_json
+
+WIDE = 64               # jobs per molecule per round (re-read the archive)
+JOB_S = 0.3             # compute seconds per job (data-intensive regime)
+MOL_MB = 100.0          # molecule archive size
+SHARED_MB = 50.0        # shared parameter database, read by every job
+
+
+def build(rounds: int, molecules: int, executors: int, cache_mb: float,
+          policy: str = "lru"):
+    """Engine + Falkon + data layer for an iterative locality-heavy
+    workload; working set = molecules x MOL_MB + SHARED_MB."""
+    clock = SimClock()
+    shared = SharedStore()
+    dl = DataLayer(shared, StagingCostModel(),
+                   cache_capacity=cache_mb * 1e6, policy=policy)
+    svc = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=executors, alloc_latency=81.0,
+                      alloc_chunk=max(1, executors // 4))), data_layer=dl)
+    eng = Engine(clock, provenance="summary")
+    eng.add_site("falkon", FalkonProvider(svc), capacity=executors)
+    wf = Workflow("diffusion", eng)
+
+    db = shared.file("params.db", SHARED_MB * 1e6)
+    archives = [shared.file(f"mol{m}.arc", MOL_MB * 1e6)
+                for m in range(molecules)]
+    analyze = wf.sim_proc("analyze", duration=JOB_S,
+                          inputs=lambda m, *_: (db, archives[m]))
+
+    barrier = None
+    for _ in range(rounds):
+        futs = []
+        for m in range(molecules):
+            if barrier is None:
+                futs.extend(analyze(m) for _ in range(WIDE))
+            else:
+                futs.extend(analyze(m, barrier) for _ in range(WIDE))
+        barrier = wf.gather(futs)
+    return eng, svc, dl, barrier, rounds * molecules * WIDE
+
+
+def measure(rounds: int, molecules: int, executors: int, cache_mb: float,
+            policy: str = "lru") -> dict:
+    t0 = time.monotonic()
+    eng, svc, dl, out, n = build(rounds, molecules, executors, cache_mb,
+                                 policy)
+    eng.run()
+    wall = time.monotonic() - t0
+    assert out.resolved, "workload did not complete"
+    assert eng.tasks_completed == n
+    makespan = eng.clock.now()
+    ws_mb = molecules * MOL_MB + SHARED_MB
+    m = dl.metrics()
+    return {
+        "tasks": n,
+        "rounds": rounds,
+        "molecules": molecules,
+        "executors": executors,
+        "policy": policy,
+        "cache_mb": cache_mb,
+        "working_set_mb": ws_mb,
+        "ws_over_cache": round(ws_mb / max(1e-9, cache_mb * executors), 3),
+        "makespan_sim_s": round(makespan, 1),
+        "tasks_per_sim_s": round(n / makespan, 2),
+        "tasks_per_wall_s": round(n / wall, 1),
+        "hit_rate": round(m["hit_rate"], 4),
+        "staged_gb": round(m["bytes_staged"] / 1e9, 2),
+        "local_gb": round(m["bytes_local"] / 1e9, 2),
+        # staged bytes over working-set bytes: ~1 in the cache-bound regime
+        # (every object staged once, ever; plus the replicated shared db),
+        # ~`rounds` when capacity-bound (re-staged every round)
+        "restage_factor": round(m["bytes_staged"] / (ws_mb * 1e6), 2),
+        "evictions": sum(e.cache.evictions for e in svc.executors
+                         if e.cache is not None),
+    }
+
+
+def _molecules_for(ratio: float, executors: int, cache_mb: float) -> int:
+    return max(1, round((ratio * executors * cache_mb - SHARED_MB) / MOL_MB))
+
+
+def sweep(rounds: int, executors: int, cache_mb: float,
+          ratios=(0.25, 0.5, 1.0, 2.0, 4.0), policy: str = "lru") \
+        -> list[dict]:
+    """Vary working-set size relative to the aggregate cache; ratio < 1 is
+    the cache-bound regime, > 1 capacity-bound."""
+    rows = []
+    for r in ratios:
+        row = measure(rounds, _molecules_for(r, executors, cache_mb),
+                      executors, cache_mb, policy)
+        row["ws_ratio"] = r
+        rows.append(row)
+    return rows
+
+
+def gpfs_baseline(rounds: int, molecules: int, executors: int) -> dict:
+    """GPFS-only staging: zero cache capacity, same cost model."""
+    row = measure(rounds, molecules, executors, 0.0)
+    row["policy"] = "gpfs-only"
+    return row
+
+
+def run() -> list[dict]:
+    """benchmarks/run.py entry — bounded smoke sweep.
+
+    Asserts the cache-hit regime is reached (CI smoke tier): hit rate
+    > 0.9 once the working set fits, >= 2x GPFS-only simulated throughput,
+    and a collapsed hit rate once the working set is 4x aggregate cache.
+    """
+    rounds, executors, cache_mb = 6, 32, 200.0
+    fit_molecules = _molecules_for(0.5, executors, cache_mb)
+
+    diffuse = measure(rounds, fit_molecules, executors, cache_mb)
+    gpfs = gpfs_baseline(rounds, fit_molecules, executors)
+    over = measure(rounds, _molecules_for(4.0, executors, cache_mb),
+                   executors, cache_mb)
+    speedup = diffuse["tasks_per_sim_s"] / gpfs["tasks_per_sim_s"]
+
+    # distinct artifact name: the CI smoke shape differs from main()'s
+    # full-sweep schema in results/data_diffusion.json
+    save_json("data_diffusion_smoke", {
+        "diffuse_fit": diffuse, "gpfs_only": gpfs,
+        "capacity_bound": over, "speedup_vs_gpfs": round(speedup, 2),
+    })
+
+    # CI smoke gates: the cache-hit regime must actually be reached
+    assert diffuse["hit_rate"] > 0.9, \
+        f"cache-bound regime not reached: hit rate {diffuse['hit_rate']}"
+    assert speedup >= 2.0, \
+        f"diffusion speedup {speedup:.2f}x < 2x over GPFS-only staging"
+    assert diffuse["evictions"] == 0 and diffuse["restage_factor"] < 2.0, \
+        "cache-bound regime should stage each object once"
+    assert (over["evictions"] > over["molecules"]
+            and over["restage_factor"] > 2.0), \
+        f"capacity-bound regime not reached: {over['restage_factor']}x"
+
+    return [{
+        "name": "data_diffusion.cache_bound",
+        "us_per_call": 1e6 / diffuse["tasks_per_wall_s"],
+        "derived": (f"{diffuse['tasks_per_sim_s']:.1f} sim tasks/s, "
+                    f"hit rate {diffuse['hit_rate']:.2f}, "
+                    f"staged {diffuse['staged_gb']:.1f} GB"),
+    }, {
+        "name": "data_diffusion.vs_gpfs",
+        "us_per_call": 1e6 / gpfs["tasks_per_wall_s"],
+        "derived": (f"{speedup:.1f}x sim tasks/s vs GPFS-only "
+                    f"({diffuse['tasks_per_sim_s']:.1f} vs "
+                    f"{gpfs['tasks_per_sim_s']:.1f})"),
+    }, {
+        "name": "data_diffusion.capacity_bound",
+        "us_per_call": 1e6 / over["tasks_per_wall_s"],
+        "derived": (f"hit rate {over['hit_rate']:.2f} at "
+                    f"{over['ws_over_cache']:.1f}x aggregate cache "
+                    f"({over['tasks_per_sim_s']:.1f} sim tasks/s)"),
+    }]
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--rounds", type=int, default=3)
+    p.add_argument("--executors", type=int, default=64)
+    p.add_argument("--cache-mb", type=float, default=400.0)
+    p.add_argument("--policy", default="lru", choices=["lru", "lfu", "size"])
+    p.add_argument("--json", action="store_true")
+    args = p.parse_args()
+
+    rows = sweep(args.rounds, args.executors, args.cache_mb,
+                 policy=args.policy)
+    fit = next(r for r in rows if r["ws_ratio"] == 0.5)
+    gpfs = gpfs_baseline(args.rounds, fit["molecules"], args.executors)
+    report = {
+        "sweep": rows,
+        "gpfs_only": gpfs,
+        "speedup_vs_gpfs": round(fit["tasks_per_sim_s"] /
+                                 gpfs["tasks_per_sim_s"], 2),
+    }
+    save_json("data_diffusion", report)
+    if args.json:
+        print(json.dumps(report))
+        return 0
+    print(f"{'ws/cache':>9} {'tasks':>8} {'hit rate':>9} {'sim t/s':>9} "
+          f"{'staged GB':>10} {'restage':>8} {'evictions':>10}")
+    for r in rows:
+        print(f"{r['ws_ratio']:>9.2f} {r['tasks']:>8} {r['hit_rate']:>9.3f} "
+              f"{r['tasks_per_sim_s']:>9.1f} {r['staged_gb']:>10.1f} "
+              f"{r['restage_factor']:>8.2f} {r['evictions']:>10}")
+    print(f"gpfs-only: {gpfs['tasks_per_sim_s']:.1f} sim tasks/s "
+          f"(staged {gpfs['staged_gb']:.1f} GB) -> diffusion speedup "
+          f"{report['speedup_vs_gpfs']:.2f}x at ws/cache=0.5")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

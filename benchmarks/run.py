@@ -33,6 +33,7 @@ MODULES = [
     "benchmarks.vmap_clustering",      # TPU adaptation of clustering
     "benchmarks.roofline",             # §Roofline (from dry-run artifacts)
     "benchmarks.million_tasks",        # scheduler scale (smoke-sized here)
+    "benchmarks.data_diffusion",       # §6: cache-aware data layer
 ]
 
 

@@ -1,0 +1,65 @@
+"""Data-aware workflow quickstart: declaring file inputs so Falkon's data
+layer (DESIGN.md §7, paper §6 "data diffusion") can serve repeated reads
+from executor-local caches and steer tasks to the executors holding them.
+
+A foreach over molecules re-reads a shared parameter database plus a
+per-molecule archive.  Declared via `inputs=`, the data layer stages each
+file from the shared store once, caches it on the staging executor, and
+routes subsequent tasks for the same file there — compare the cache
+hit-rate and staged bytes against the locality-blind baseline (a zero-
+capacity cache: same staging cost model, nothing retained).
+
+Run:  PYTHONPATH=src python examples/data_aware_workflow.py
+"""
+from repro.core import (DataLayer, DRPConfig, Engine, FalkonConfig,
+                        FalkonProvider, FalkonService, SharedStore, SimClock,
+                        StagingCostModel, Workflow)
+
+MOLECULES = 24
+REREADS = 16            # tasks per molecule (all read the same archive)
+EXECUTORS = 8
+
+
+def run_workflow(cache_mb: float):
+    clock = SimClock()
+    shared = SharedStore()
+    layer = DataLayer(shared, StagingCostModel(),
+                      cache_capacity=cache_mb * 1e6, policy="lru")
+    service = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=EXECUTORS, alloc_latency=5.0,
+                      alloc_chunk=EXECUTORS)), data_layer=layer)
+    engine = Engine(clock)
+    engine.add_site("pod0", FalkonProvider(service), capacity=EXECUTORS)
+    wf = Workflow("data-aware", engine)
+
+    params = shared.file("params.db", 50e6)
+    archives = [shared.file(f"mol{m}.arc", 100e6) for m in range(MOLECULES)]
+
+    @wf.atomic(duration=0.2, inputs=lambda m: (params, archives[m]))
+    def analyze(m):
+        return m
+
+    results = wf.foreach(list(range(MOLECULES)),
+                         lambda m: [analyze(m) for _ in range(REREADS)])
+    wf.run()
+    assert results.resolved
+    return clock.now(), layer.metrics()
+
+
+def main():
+    print(f"== {MOLECULES} molecules x {REREADS} re-reads on "
+          f"{EXECUTORS} executors ==")
+    t_blind, m_blind = run_workflow(cache_mb=0.0)
+    t_aware, m_aware = run_workflow(cache_mb=400.0)
+    for label, t, m in (("locality-blind (GPFS every read)", t_blind, m_blind),
+                        ("data diffusion (400 MB caches)", t_aware, m_aware)):
+        print(f"   {label}:")
+        print(f"     makespan {t:8.1f} virtual s | hit rate "
+              f"{m['hit_rate']:5.1%} | staged {m['bytes_staged'] / 1e9:6.1f} "
+              f"GB | local {m['bytes_local'] / 1e9:6.1f} GB")
+    print(f"   speedup {t_blind / t_aware:.2f}x, staged bytes cut "
+          f"{m_blind['bytes_staged'] / max(1.0, m_aware['bytes_staged']):.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,10 @@ Public API:
     Engine, Workflow, Dataset, mappers, FalkonService, providers,
     RestartLog, FaultInjector, SimClock/RealClock.
 """
+from repro.core.datastore import (DataLayer, DataObject, EvictionPolicy,
+                                  ExecutorCache, LFUPolicy, LRUPolicy,
+                                  SharedStore, SizeAwarePolicy,
+                                  StagingCostModel)
 from repro.core.engine import Engine
 from repro.core.falkon import DRPConfig, FalkonConfig, FalkonService
 from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
@@ -37,6 +41,9 @@ __all__ = [
     "DataFuture", "resolved", "when_all", "SimClock", "RealClock",
     "RestartLog", "FaultInjector", "RetryPolicy", "TaskFailure",
     "VDC", "InvocationRecord", "LoadBalancer", "Site", "StreamStat",
+    "DataLayer", "DataObject", "SharedStore", "ExecutorCache",
+    "StagingCostModel", "EvictionPolicy", "LRUPolicy", "LFUPolicy",
+    "SizeAwarePolicy",
     "Dataset", "Mapper", "ListMapper", "FileSystemMapper", "CSVMapper",
     "ShardMapper", "PhysicalRef", "Struct", "ArrayOf", "Primitive",
     "INT", "FLOAT", "STRING", "FILE",

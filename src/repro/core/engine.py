@@ -23,6 +23,7 @@ from __future__ import annotations
 
 from collections import deque
 
+from repro.core.datastore import inputs_of
 from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
 from repro.core.futures import DataFuture, when_all
 from repro.core.provenance import VDC, InvocationRecord
@@ -86,7 +87,7 @@ class Engine:
     def submit(self, name: str, fn=None, args: list | None = None,
                duration: float | None = None, app: str | None = None,
                durable: bool = False, key: str | None = None,
-               vmap_key=None) -> DataFuture:
+               vmap_key=None, inputs=None) -> DataFuture:
         args = args or []
         out = DataFuture(name=name)
         if key is None:
@@ -111,8 +112,14 @@ class Engine:
                 out.set(value)
                 return out
 
+        # Procedure.__call__ already normalizes to a tuple — trust it and
+        # skip re-normalizing on the per-task hot path; a callable spec
+        # receives the call args, as on the Procedure path
+        if type(inputs) is not tuple:
+            inputs = inputs_of(inputs, *args) if inputs is not None else ()
         task = Task(name, fn, args, out, duration, app,
-                    self.retry_policy.max_retries, durable, key)
+                    self.retry_policy.max_retries, durable, key,
+                    inputs=inputs)
         task.created_time = self.clock.now()
         task.vmap_key = vmap_key
         if self.fault_injector is not None:

@@ -53,7 +53,7 @@ class FalkonConfig:
 class Executor:
     __slots__ = ("id", "host", "busy", "suspended_until", "consec_failures",
                  "idle_since", "busy_time", "tasks_done", "registered_at",
-                 "task_log")
+                 "task_log", "cache", "local_q", "local_work", "in_idle")
 
     def __init__(self, eid: int, host: str, now: float):
         self.id = eid
@@ -66,23 +66,34 @@ class Executor:
         self.tasks_done = 0
         self.registered_at = now
         self.task_log: list = []   # (start, end) per task; trace mode only
+        self.cache = None          # ExecutorCache when a DataLayer is attached
+        self.local_q: deque = deque()   # affinity queue (data-aware dispatch)
+        self.local_work = 0.0      # sum of parked tasks' sim durations
+        self.in_idle = False       # a live entry exists in the idle deque
 
 
 class FalkonService:
     """Web-services interface -> in-process API (see DESIGN.md §2)."""
 
     def __init__(self, clock: Clock, config: FalkonConfig | None = None,
-                 name: str = "falkon", trace: bool = False):
+                 name: str = "falkon", trace: bool = False,
+                 data_layer=None):
         self.clock = clock
         self.cfg = config or FalkonConfig()
         self.name = name
         self.trace = trace
+        # data diffusion (DESIGN.md §7): when a DataLayer is attached, tasks
+        # with declared inputs prefer idle executors already caching them and
+        # input reads are priced by the staging cost model.  None keeps the
+        # locality-blind O(1) dispatch path byte-for-byte.
+        self.data_layer = data_layer
         self.queue: deque = deque()
         self.executors: list[Executor] = []
         self._idle: deque = deque()   # O(1) dispatch: idle-executor pool
         self._next_eid = 0
         self._allocating = 0
         self._last_shrink_scan = float("-inf")
+        self._parked = 0   # tasks waiting in executor affinity queues
         # metrics — bounded summaries always on; raw logs only under trace
         self.peak_queue = 0
         self.dispatched = 0
@@ -116,8 +127,10 @@ class FalkonService:
                 e = Executor(self._next_eid, f"{self.name}-host{self._next_eid}",
                              self.clock.now())
                 self._next_eid += 1
+                if self.data_layer is not None:
+                    self.data_layer.register_executor(e)
                 self.executors.append(e)
-                self._idle.append(e)
+                self._push_idle(e)
             self._pump()
 
         self.clock.schedule(self.cfg.drp.alloc_latency, arrive)
@@ -127,8 +140,12 @@ class FalkonService:
         have = len(self.executors) + self._allocating
         if have >= d.max_executors:
             return
-        if len(self.queue) > d.queue_per_executor * max(1, have) or have == 0:
-            want = min(d.alloc_chunk, len(self.queue) - have + 1)
+        # parked affinity-queue tasks are backlog too: they wait for
+        # specific holders, but a larger pool gives spillover somewhere
+        # to replicate
+        backlog = len(self.queue) + self._parked
+        if backlog > d.queue_per_executor * max(1, have) or have == 0:
+            want = min(d.alloc_chunk, backlog - have + 1)
             self._allocate(max(1, want))
 
     def _maybe_shrink(self):
@@ -136,7 +153,10 @@ class FalkonService:
         # amortized O(1): nothing can be idle past the timeout while the
         # queue is non-empty, and a full pool scan at most once per half
         # timeout — the seed scanned every executor on every completion,
-        # making per-task cost O(pool size)
+        # making per-task cost O(pool size).  Parked affinity-queue tasks
+        # run only on their (busy) holder, which the per-executor
+        # `local_q` check below protects — other idle executors may still
+        # be released.
         if self.queue or len(self.executors) <= d.min_executors:
             return
         now = self.clock.now()
@@ -145,11 +165,15 @@ class FalkonService:
         self._last_shrink_scan = now
         drop = set()
         for e in self.executors:
-            if (not e.busy and len(self.executors) - len(drop) >
-                    d.min_executors
+            if (not e.busy and not e.local_q
+                    and len(self.executors) - len(drop) > d.min_executors
                     and now - e.idle_since > d.idle_timeout):
                 drop.add(e.id)  # de-register (paper: idle auto-deregistration)
         if drop:
+            if self.data_layer is not None:
+                for e in self.executors:
+                    if e.id in drop:
+                        self.data_layer.deregister_executor(e)
             self.executors = [e for e in self.executors if e.id not in drop]
             self._idle = deque(e for e in self._idle if e.id not in drop)
 
@@ -165,6 +189,14 @@ class FalkonService:
         self._maybe_grow()
         self._pump()
 
+    def _push_idle(self, e: Executor) -> None:
+        """Add to the idle pool unless a live entry already exists — an
+        executor claimed off-deque (cache-aware dispatch) keeps its old
+        entry as the marker, so the deque never exceeds the pool size."""
+        if not e.in_idle:
+            e.in_idle = True
+            self._idle.append(e)
+
     def _idle_executor(self) -> Optional[Executor]:
         idle = self._idle
         if not idle:
@@ -174,12 +206,14 @@ class FalkonService:
         e = idle[0]
         if not e.busy and self.clock.now() >= e.suspended_until:
             idle.popleft()
+            e.in_idle = False
             return e
         now = self.clock.now()
         skipped = []
         found = None
         while self._idle:
             e = self._idle.popleft()
+            e.in_idle = False
             if e.busy:
                 continue  # stale entry
             if now < e.suspended_until:
@@ -187,6 +221,8 @@ class FalkonService:
                 continue
             found = e
             break
+        for s in skipped:
+            s.in_idle = True
         self._idle.extend(skipped)
         if found is None and skipped:
             # everyone suspended: retry when the first suspension lapses
@@ -199,17 +235,53 @@ class FalkonService:
         self.queue_stat.observe(self.clock.now(), len(queue))
         if self.trace:
             self.queue_len_log.append((self.clock.now(), len(queue)))
+        dl = self.data_layer
+        if dl is None:
+            while queue:
+                e = self._idle_executor()
+                if e is None:
+                    break
+                task = queue.popleft()
+                self._dispatch(e, task)
+            return
+        # cache-aware dispatch (DESIGN.md §7): each task is routed once —
+        # to an idle holder of its inputs (run now), behind a busy holder
+        # (its affinity queue, drained at that executor's next completion),
+        # or to first-idle as cold spillover.  A task moved to an affinity
+        # queue never returns to the global queue, so routing is amortized
+        # O(1) per task.  Idle holders are claimed without removing their
+        # idle-deque entry — the entry goes stale and the existing
+        # busy-skip in `_idle_executor` drops it.
+        now = self.clock.now()
         while queue:
-            e = self._idle_executor()
+            task = queue[0]
+            if task.inputs:
+                e, run_now = dl.pick_home(task, now)
+                if e is not None and not run_now:
+                    queue.popleft()
+                    e.local_q.append(task)   # wait behind the busy holder
+                    e.local_work += sim_duration(task)
+                    self._parked += 1
+                    continue
+            else:
+                e = None
             if e is None:
-                break
-            task = queue.popleft()
+                e = self._idle_executor()
+                if e is None:
+                    break
+            queue.popleft()
             self._dispatch(e, task)
 
     def _dispatch(self, e: Executor, task):
         e.busy = True
         self.dispatched += 1
         overhead = self.cfg.dispatch_overhead
+        dl = self.data_layer
+        # input staging: cached inputs are read locally, the rest staged
+        # from the shared store (and cached for the next task); the I/O time
+        # extends the task's service time on this executor
+        io = (dl.stage_inputs(e, task, self.clock)
+              if dl is not None and task.inputs else 0.0)
         start = self.clock.now() + overhead
         task.start_time = start
         task.host = e.host
@@ -219,6 +291,8 @@ class FalkonService:
             end = self.clock.now()
             if self.trace:
                 e.task_log.append((start, end))
+            if dl is not None and task.inputs:
+                dl.release_inputs(e, task)
             self.tasks_finished += 1
             e.busy = False
             e.idle_since = end
@@ -232,16 +306,33 @@ class FalkonService:
                     # paper §3.12: suspend faulty host, reschedule elsewhere
                     e.suspended_until = end + self.cfg.host_suspend_time
                     e.consec_failures = 0
-            self._idle.append(e)
+            next_local = None
+            if e.local_q and end < e.suspended_until:
+                # suspended host: hand its affinity queue back to the
+                # service so other holders (or cold spillover) take it
+                self._parked -= len(e.local_q)
+                self.queue.extendleft(reversed(e.local_q))
+                e.local_q.clear()
+                e.local_work = 0.0
+            elif e.local_q:
+                next_local = e.local_q.popleft()
+                e.local_work -= sim_duration(next_local)
+                self._parked -= 1
+            if next_local is None:
+                self._push_idle(e)
             # break the task -> callback -> task reference cycle so
             # completed tasks are freed by refcounting, not the cycle GC
             callback = task._falkon_done
             task._falkon_done = None
+            if next_local is not None:
+                # affinity queue drains first: the executor keeps running
+                # tasks whose inputs it already holds (data diffusion)
+                self._dispatch(e, next_local)
             callback(ok, value, err)
             self._maybe_shrink()
             self._pump()
 
-        self.clock.schedule(overhead + sim_duration(task), finish)
+        self.clock.schedule(overhead + io + sim_duration(task), finish)
 
     # ------------------------------------------------------------------
     def utilization(self) -> dict:
@@ -259,7 +350,7 @@ class FalkonService:
 
     def metrics(self) -> dict:
         """Bounded metrics snapshot — safe at any task count."""
-        return {
+        m = {
             "dispatched": self.dispatched,
             "finished": self.tasks_finished,
             "peak_queue": self.peak_queue,
@@ -268,3 +359,7 @@ class FalkonService:
             "executors_acquired": self.alloc_stat.total,
             "executors": len(self.executors),
         }
+        if self.data_layer is not None:
+            m["parked"] = self._parked
+            m["data"] = self.data_layer.metrics()
+        return m

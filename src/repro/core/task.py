@@ -23,11 +23,12 @@ class Task:
                  "sim_value", "app", "attempt", "retries_left", "site",
                  "host", "created_time", "submit_time", "start_time",
                  "durable", "fault_check", "_falkon_done", "vmap_key",
-                 "site_failures")
+                 "site_failures", "inputs")
 
     def __init__(self, name: str, fn, args, output: DataFuture,
                  duration: float | None, app: str | None,
-                 retries: int, durable: bool, key: str):
+                 retries: int, durable: bool, key: str,
+                 inputs: tuple = ()):
         self.id = next(_task_ids)
         self.name = name
         self.key = key
@@ -47,6 +48,9 @@ class Task:
         self.durable = durable
         self.fault_check = None
         self.vmap_key = None
+        # declared file inputs (DataObject tuple) — the data layer's
+        # cache-aware dispatch keys on these; empty for compute-only tasks
+        self.inputs = inputs
         # lazily allocated on first failure: a dict per task is measurable
         # overhead at 10^6 tasks and almost all tasks never fail
         self.site_failures: Optional[dict] = None

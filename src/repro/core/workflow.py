@@ -15,18 +15,25 @@ from __future__ import annotations
 import functools
 from typing import Any, Callable
 
+from repro.core.datastore import inputs_of
 from repro.core.engine import Engine
 from repro.core.futures import DataFuture, resolved, when_all
 from repro.core.xdtm import Dataset, Mapper, typecheck
 
 
 class Procedure:
-    """An atomic procedure: a typed, dispatchable interface to a callable."""
+    """An atomic procedure: a typed, dispatchable interface to a callable.
+
+    `inputs` declares the procedure's file inputs for the data layer
+    (DESIGN.md §7): a `DataObject`, an iterable of them, or a callable
+    mapping the call arguments to either — so a foreach body can name
+    per-item files (`inputs=lambda mol: (archive, mol_file[mol])`).
+    """
 
     def __init__(self, wf: "Workflow", fn: Callable | None, name: str,
                  duration: float | Callable | None = None,
                  app: str | None = None, durable: bool = False,
-                 input_types: tuple = (), vmap_key=None):
+                 input_types: tuple = (), vmap_key=None, inputs=None):
         self.wf = wf
         self.fn = fn
         self.name = name
@@ -35,6 +42,10 @@ class Procedure:
         self.durable = durable
         self.input_types = input_types
         self.vmap_key = vmap_key
+        # materialize non-callable declarations once: a one-shot iterator
+        # (generator) would silently yield () on every call after the first
+        self.inputs = inputs if inputs is None or callable(inputs) \
+            else inputs_of(inputs)
 
     def __call__(self, *args) -> DataFuture:
         if self.input_types:
@@ -46,9 +57,12 @@ class Procedure:
         dur = self.duration
         if callable(dur):
             dur = None  # resolved at dispatch; keep simple: static durations
+        inputs = self.inputs
+        if inputs is not None and type(inputs) is not tuple:
+            inputs = inputs_of(inputs, *args)   # callable spec: map call args
         return self.wf.engine.submit(
             self.name, self.fn, list(args), duration=dur, app=self.app,
-            durable=self.durable, vmap_key=self.vmap_key)
+            durable=self.durable, vmap_key=self.vmap_key, inputs=inputs)
 
 
 class Workflow:
@@ -60,21 +74,24 @@ class Workflow:
     def atomic(self, fn: Callable | None = None, *, name: str | None = None,
                duration: float | None = None, app: str | None = None,
                durable: bool = False, input_types: tuple = (),
-               vmap_key=None):
+               vmap_key=None, inputs=None):
         """Decorator: define an atomic procedure."""
 
         def wrap(f):
             return Procedure(self, f, name or (f.__name__ if f else "task"),
                              duration=duration, app=app, durable=durable,
-                             input_types=input_types, vmap_key=vmap_key)
+                             input_types=input_types, vmap_key=vmap_key,
+                             inputs=inputs)
 
         if fn is not None:
             return wrap(fn)
         return wrap
 
-    def sim_proc(self, name: str, duration: float, app: str | None = None):
+    def sim_proc(self, name: str, duration: float, app: str | None = None,
+                 inputs=None):
         """Procedure with a simulated duration and no body (benchmarks)."""
-        return Procedure(self, None, name, duration=duration, app=app)
+        return Procedure(self, None, name, duration=duration, app=app,
+                         inputs=inputs)
 
     # ------------------------------------------------------------------
     def foreach(self, collection, body: Callable[[Any], Any],

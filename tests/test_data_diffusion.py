@@ -1,0 +1,420 @@
+"""Unit tests for the data-diffusion layer (DESIGN.md §7):
+
+  * eviction invariants — capacity never exceeded, LRU/LFU/size-aware
+    victim ordering, eviction of pinned (in-use) objects deferred;
+  * cache-aware dispatch — tasks are routed to executors already holding
+    their inputs, the holder index tracks admissions/evictions, and runs
+    are deterministic under `SimClock`;
+  * GPFS-only mode (zero cache capacity) stages every read and stays
+    locality-blind;
+  * wave-coalesced batch admission — fewer clock events, same FIFO order
+    and gateway rate.
+"""
+import pytest
+
+from repro.core import (BatchSchedulerProvider, DataLayer, DataObject,
+                        DRPConfig, Engine, ExecutorCache, FalkonConfig,
+                        FalkonProvider, FalkonService, LFUPolicy, LRUPolicy,
+                        SharedStore, SimClock, SizeAwarePolicy,
+                        StagingCostModel, Workflow)
+
+
+def _obj(name, size):
+    return DataObject(name, size)
+
+
+# ---------------------------------------------------------------------------
+# eviction invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["lru", "lfu", "size"])
+def test_capacity_never_exceeded(policy):
+    cache = ExecutorCache(100.0, policy)
+    for i in range(50):
+        cache.admit(_obj(f"o{i}", 30.0))
+        assert cache.used <= cache.capacity
+        assert cache.used == sum(o.size for o in cache.objects.values())
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu", "size"])
+def test_object_larger_than_cache_is_bypassed(policy):
+    cache = ExecutorCache(100.0, policy)
+    cache.admit(_obj("small", 40.0))
+    admitted, evicted = cache.admit(_obj("huge", 150.0))
+    assert not admitted and evicted == []
+    assert cache.contains("small") and cache.used == 40.0
+
+
+def test_lru_evicts_least_recently_used():
+    cache = ExecutorCache(100.0, "lru")
+    for name in ("a", "b", "c"):
+        cache.admit(_obj(name, 30.0))
+    cache.touch("a")                       # recency now b < c < a
+    _, evicted = cache.admit(_obj("d", 30.0))
+    assert [o.name for o in evicted] == ["b"]
+    _, evicted = cache.admit(_obj("e", 60.0))
+    assert [o.name for o in evicted] == ["c", "a"]
+
+
+def test_lfu_evicts_least_frequently_used():
+    cache = ExecutorCache(100.0, "lfu")
+    for name in ("a", "b", "c"):
+        cache.admit(_obj(name, 30.0))
+    for _ in range(3):
+        cache.touch("a")
+    cache.touch("c")
+    _, evicted = cache.admit(_obj("d", 30.0))
+    assert [o.name for o in evicted] == ["b"]   # freq: b=1 < c=2 < a=4
+    # tie at freq 1 (d) vs freq 2 (c): d is least frequent
+    _, evicted = cache.admit(_obj("e", 30.0))
+    assert [o.name for o in evicted] == ["d"]
+
+
+def test_size_aware_evicts_largest_first():
+    cache = ExecutorCache(100.0, "size")
+    cache.admit(_obj("big", 50.0))
+    cache.admit(_obj("mid", 30.0))
+    cache.admit(_obj("small", 15.0))
+    _, evicted = cache.admit(_obj("new", 40.0))
+    assert [o.name for o in evicted] == ["big"]
+    assert cache.contains("mid") and cache.contains("small")
+
+
+def test_size_aware_lazy_heap_handles_readmission():
+    cache = ExecutorCache(100.0, "size")
+    cache.admit(_obj("a", 60.0))
+    cache.admit(_obj("b", 30.0))
+    cache.admit(_obj("c", 60.0))           # evicts a (largest, oldest)
+    assert not cache.contains("a")
+    cache.admit(_obj("a", 60.0))           # re-admit: evicts c
+    assert cache.contains("a") and not cache.contains("c")
+    assert cache.used <= cache.capacity
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu", "size"])
+def test_pinned_objects_deferred_from_eviction(policy):
+    cache = ExecutorCache(100.0, policy)
+    cache.admit(_obj("inuse", 60.0))
+    cache.pin("inuse")
+    admitted, evicted = cache.admit(_obj("x", 60.0))
+    assert not admitted and evicted == []  # only pinned bytes evictable
+    assert cache.contains("inuse")
+    cache.admit(_obj("y", 30.0))           # fits beside the pinned object
+    assert cache.contains("y")
+    cache.unpin("inuse")
+    admitted, evicted = cache.admit(_obj("x", 60.0))
+    assert admitted and "inuse" in [o.name for o in evicted]
+
+
+def test_admit_does_not_gut_cache_on_infeasible_admission():
+    """Feasibility is checked before evicting: an object that cannot fit
+    beside the pinned bytes must not evict useful replicas on the way to
+    failing."""
+    cache = ExecutorCache(1000.0, "lru")
+    cache.admit(_obj("pinned", 500.0))
+    cache.pin("pinned")
+    for i in range(6):
+        cache.admit(_obj(f"warm{i}", 100.0))   # fills the unpinned half
+    warm_before = [n for n in cache.objects if n.startswith("warm")]
+    admitted, evicted = cache.admit(_obj("big", 600.0))
+    assert not admitted and evicted == []      # infeasible: nothing gutted
+    assert [n for n in cache.objects if n.startswith("warm")] == warm_before
+
+
+def test_pin_refcounts():
+    cache = ExecutorCache(100.0, "lru")
+    cache.admit(_obj("a", 80.0))
+    cache.pin("a")
+    cache.pin("a")
+    cache.unpin("a")
+    assert cache.pinned("a")               # one pin still outstanding
+    cache.unpin("a")
+    assert not cache.pinned("a")
+
+
+# ---------------------------------------------------------------------------
+# cache-aware dispatch
+# ---------------------------------------------------------------------------
+
+def _diffusion_engine(n_exec=4, cache_mb=400.0, policy="lru",
+                      alloc_latency=1.0):
+    clock = SimClock()
+    shared = SharedStore()
+    dl = DataLayer(shared, StagingCostModel(), cache_capacity=cache_mb * 1e6,
+                   policy=policy)
+    svc = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=n_exec, alloc_latency=alloc_latency,
+                      alloc_chunk=n_exec)), data_layer=dl)
+    eng = Engine(clock, provenance="summary")
+    eng.add_site("falkon", FalkonProvider(svc), capacity=n_exec)
+    return clock, shared, dl, svc, eng
+
+
+def _run_locality_workload(policy="lru", cache_mb=400.0):
+    clock, shared, dl, svc, eng = _diffusion_engine(policy=policy,
+                                                    cache_mb=cache_mb)
+    wf = Workflow("t", eng)
+    files = [shared.file(f"f{i}.dat", 100e6) for i in range(8)]
+    proc = wf.sim_proc("analyze", duration=1.0,
+                       inputs=lambda i: (files[i % 8],))
+    out = wf.foreach(list(range(256)), lambda i: proc(i))
+    wf.run()
+    assert out.resolved
+    return clock, dl, svc, eng
+
+
+def test_dispatch_prefers_holders_and_hits():
+    _, dl, svc, eng = _run_locality_workload()
+    assert eng.tasks_completed == 256
+    # 8 distinct files; each staged a bounded number of times (cold misses
+    # + replicas), everything else served from executor caches
+    assert dl.hits + dl.misses == 256
+    assert dl.hit_rate() > 0.9
+    assert dl.metrics()["indexed_objects"] == 8
+
+
+def test_dispatch_is_deterministic_under_simclock():
+    runs = [_run_locality_workload() for _ in range(2)]
+    (c1, d1, s1, e1), (c2, d2, s2, e2) = runs
+    assert c1.now() == c2.now()
+    assert d1.hits == d2.hits and d1.misses == d2.misses
+    assert d1.bytes_staged == d2.bytes_staged
+    assert s1.dispatched == s2.dispatched
+    # identical per-executor task assignment, not just aggregates
+    assert [e.tasks_done for e in s1.executors] == \
+        [e.tasks_done for e in s2.executors]
+    assert [sorted(e.cache.objects) for e in s1.executors] == \
+        [sorted(e.cache.objects) for e in s2.executors]
+
+
+def test_idle_pool_stays_bounded_under_affinity_dispatch():
+    """Claiming idle holders off-deque must not grow the idle pool: an
+    executor keeps at most one live entry (regression for the stale-entry
+    leak under affinity-heavy steady state)."""
+    clock, shared, dl, svc, eng = _diffusion_engine(n_exec=2)
+    wf = Workflow("t", eng)
+    f0 = shared.file("hot.dat", 10e6)
+    proc = wf.sim_proc("read", duration=1.0, inputs=lambda *_: (f0,))
+    out = proc()
+    for _ in range(500):
+        out = proc(out)                # serial chain, same input every time
+    eng.run()
+    assert out.resolved
+    assert len(svc._idle) <= len(svc.executors)
+
+
+def test_hot_shared_input_does_not_serialize_wide_fanout():
+    """Wait-vs-stage: compute-heavy tasks sharing one hot input must
+    replicate across idle executors instead of all parking behind the
+    first holder (regression: 100 x 10s tasks once took 24x the
+    locality-blind makespan)."""
+    def makespan(cache_mb):
+        clock, shared, dl, svc, eng = _diffusion_engine(
+            n_exec=16, cache_mb=cache_mb)
+        wf = Workflow("t", eng)
+        hot = shared.file("hot.dat", 100e6)
+        proc = wf.sim_proc("crunch", duration=10.0, inputs=lambda i: (hot,))
+        out = wf.foreach(list(range(64)), lambda i: proc(i))
+        wf.run()
+        assert out.resolved
+        return clock.now(), dl
+
+    t_aware, dl = makespan(400.0)
+    t_blind, _ = makespan(0.0)
+    # staging 100 MB is cheap next to 10 s of compute: the whole pool must
+    # be used (64 tasks / 16 executors ~ 4 rounds), not one holder
+    assert t_aware <= t_blind * 1.5
+    assert dl.misses > 1                   # replicas were staged
+
+
+def test_holder_index_tracks_evictions():
+    clock, shared, dl, svc, eng = _diffusion_engine(
+        n_exec=1, cache_mb=250.0)   # holds db-less: 2 x 100MB files
+    wf = Workflow("t", eng)
+    files = [shared.file(f"f{i}.dat", 100e6) for i in range(4)]
+    proc = wf.sim_proc("scan", duration=1.0,
+                       inputs=lambda i, *_: (files[i],))
+    # serial chain so the single executor churns through all four files
+    f = proc(0)
+    for i in (1, 2, 3, 0, 1):
+        f = proc(i, f)
+    eng.run()
+    assert f.resolved
+    e = svc.executors[0]
+    # index contains exactly the objects currently cached on the executor
+    held = {name for name, holders in dl._holders.items()
+            if e.id in holders}
+    assert held == set(e.cache.objects)
+    assert e.cache.used <= e.cache.capacity
+    assert e.cache.evictions > 0
+
+
+def test_gpfs_only_mode_stages_everything():
+    clock, shared, dl, svc, eng = _diffusion_engine(cache_mb=0.0)
+    wf = Workflow("t", eng)
+    f = shared.file("x.dat", 100e6)
+    proc = wf.sim_proc("read", duration=0.5, inputs=lambda i: (f,))
+    out = wf.foreach(list(range(32)), lambda i: proc(i))
+    wf.run()
+    assert out.resolved
+    assert dl.hits == 0 and dl.misses == 32
+    assert dl.bytes_staged == 32 * 100e6
+    assert dl.metrics()["indexed_objects"] == 0
+    assert shared.reads == 32 and shared.readers == 0  # all reads released
+
+
+def test_staging_costs_extend_makespan():
+    def makespan(size):
+        clock, shared, dl, svc, eng = _diffusion_engine(n_exec=1,
+                                                        cache_mb=0.0)
+        wf = Workflow("t", eng)
+        f = shared.file("x.dat", size)
+        proc = wf.sim_proc("read", duration=1.0, inputs=lambda: (f,))
+        out = proc()
+        wf.run()
+        assert out.resolved
+        return clock.now()
+
+    small, big = makespan(1e6), makespan(500e6)
+    assert big > small  # staging 500 MB costs more than 1 MB
+    # 500 MB at the 500 MB/s single-reader bandwidth ~ 1 s extra
+    assert big - small == pytest.approx(499e6 / 500e6, rel=0.05)
+
+
+def test_data_layer_metrics_are_bounded():
+    _, dl, svc, eng = _run_locality_workload()
+    m = dl.metrics()
+    assert m["hits"] == dl.hits and m["misses"] == dl.misses
+    assert 0.0 <= m["hit_rate"] <= 1.0
+    assert len(dl.staged_stat.sample) < dl.staged_stat.cap
+    assert len(dl.hit_stat.sample) < dl.hit_stat.cap
+    assert m["staged_per_task"]["count"] == dl.hits + dl.misses \
+        or m["staged_per_task"]["count"] <= dl.hits + dl.misses
+    # falkon metrics surface the data section only when a layer is attached
+    assert "data" in svc.metrics()
+    clock = SimClock()
+    plain = FalkonService(clock)
+    assert "data" not in plain.metrics()
+
+
+def test_locality_blind_service_unchanged_without_data_layer():
+    clock = SimClock()
+    svc = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=4, alloc_latency=1.0, alloc_chunk=4)))
+    eng = Engine(clock, provenance="summary")
+    eng.add_site("f", FalkonProvider(svc), capacity=4)
+    obj = DataObject("x.dat", 1e6)
+    outs = [eng.submit(f"t{i}", None, duration=1.0, inputs=(obj,))
+            for i in range(16)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    # inputs are carried on the task but ignored: no staging time was added
+    assert clock.now() == pytest.approx(1.0 + 4 * 1.0 + 4 / 487.0, rel=0.01)
+
+
+def test_clustering_bundles_carry_union_of_inputs():
+    """ClusteringProvider composes with the data layer: a bundle stages the
+    union of its members' declared inputs (not silently none)."""
+    from repro.core import ClusteringProvider
+    clock, shared, dl, svc, eng = _diffusion_engine(n_exec=2)
+    prov = ClusteringProvider(clock, FalkonProvider(svc), window=0.5,
+                              bundle_size=4)
+    eng.balancer.sites[0].provider = prov
+    f0 = shared.file("a.dat", 10e6)
+    f1 = shared.file("b.dat", 20e6)
+    outs = [eng.submit(f"t{i}", None, duration=1.0,
+                       inputs=(f0,) if i % 2 else (f0, f1))
+            for i in range(8)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    # two bundles, union inputs {a, b}: staged once (cold bundle), served
+    # from cache for the second bundle (affinity routing)
+    assert dl.misses == 2 and dl.hits == 2
+    assert dl.bytes_staged == 30e6
+    assert shared.reads == dl.misses
+
+
+# ---------------------------------------------------------------------------
+# wave-coalesced batch admission
+# ---------------------------------------------------------------------------
+
+def test_batch_admission_coalesces_events_under_backlog():
+    clock = SimClock()
+    prov = BatchSchedulerProvider(clock, nodes=4, submit_rate=10.0,
+                                  sched_latency=30.0)
+    done = []
+    from repro.core.futures import DataFuture
+    from repro.core.task import Task
+    n = 300
+    for i in range(n):
+        t = Task(f"t{i}", None, [], DataFuture(), 1.0, None,
+                 retries=0, durable=False, key="")
+        prov.submit(t, lambda ok, v, e, i=i: done.append(i))
+    clock.run()
+    assert done == list(range(n))          # FIFO preserved
+    # 300 jobs at 10 jobs/s gateway, 30 s scheduler cycle, 3.75 s admit
+    # window: ~37 jobs share each admission event instead of one per job
+    assert prov.admission_events <= 10
+    assert prov.admission_events >= 2
+
+
+def test_batch_wave_timing_matches_per_job_bounds():
+    """Each job is admitted no earlier than its per-job admission time
+    (gateway slot + sched_latency, the seed's model) and at most
+    `admit_window` later — so serial-gateway pacing is preserved."""
+    clock = SimClock()
+    prov = BatchSchedulerProvider(clock, nodes=1000, submit_rate=2.0,
+                                  sched_latency=20.0)
+    from repro.core.futures import DataFuture
+    from repro.core.task import Task
+    tasks = []
+    for i in range(50):
+        t = Task(f"t{i}", None, [], DataFuture(), 0.0, None,
+                 retries=0, durable=False, key="")
+        tasks.append(t)
+        prov.submit(t, lambda ok, v, e: None)
+    clock.run()
+    for i, t in enumerate(tasks):
+        admit = i * 0.5 + 20.0
+        assert t.start_time >= admit - 1e-9
+        assert t.start_time <= admit + prov.admit_window + 1e-9
+
+
+def test_batch_wave_preserves_gateway_rate_distinction():
+    """Two providers differing only in gateway rate must still produce
+    different makespans (the Fig 6/12 PBS-vs-Condor distinction) — wave
+    quantization must not collapse the serial throttle."""
+    def makespan(rate):
+        clock = SimClock()
+        prov = BatchSchedulerProvider(clock, nodes=1000, submit_rate=rate,
+                                      sched_latency=133.0)
+        from repro.core.futures import DataFuture
+        from repro.core.task import Task
+        for i in range(64):
+            t = Task(f"t{i}", None, [], DataFuture(), 1.0, None,
+                     retries=0, durable=False, key="")
+            prov.submit(t, lambda ok, v, e: None)
+        clock.run()
+        return clock.now()
+
+    pbs, condor = makespan(1.0), makespan(0.5)
+    # last job clears the gateway at ~63 s vs ~126 s; both + 133 s latency
+    assert condor - pbs == pytest.approx(63.0, abs=2 * 133.0 / 8)
+    assert condor > pbs
+
+
+def test_batch_zero_latency_is_exact_per_job():
+    clock = SimClock()
+    prov = BatchSchedulerProvider(clock, nodes=4, submit_rate=1e9,
+                                  sched_latency=0.0)
+    from repro.core.futures import DataFuture
+    from repro.core.task import Task
+    done = []
+    for i in range(16):
+        t = Task(f"t{i}", None, [], DataFuture(), 1.0, None,
+                 retries=0, durable=False, key="")
+        prov.submit(t, lambda ok, v, e, i=i: done.append(i))
+    clock.run()
+    assert done == list(range(16))
+    assert prov.admission_events == 16     # singleton waves
+    assert clock.now() == pytest.approx(4.0)

@@ -178,8 +178,11 @@ def test_clustering_amortizes_overhead():
     def run(cluster):
         clock = SimClock()
         eng = Engine(clock)
+        # admit_window=0: exact per-job admission — the 2.0x ratio below is
+        # calibrated to the exact model with zero slack, so wave-quantized
+        # admission lateness (default sched_latency/8) would skew it
         inner = BatchSchedulerProvider(clock, nodes=4, submit_rate=1.0,
-                                       sched_latency=10.0)
+                                       sched_latency=10.0, admit_window=0.0)
         prov = ClusteringProvider(clock, inner, window=0.5, bundle_size=8) \
             if cluster else inner
         eng.add_site("s", prov, capacity=4)
