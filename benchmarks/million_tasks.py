@@ -50,22 +50,25 @@ JOB_S = 168.0                                       # ~paper job duration
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def build_workload(eng, n_tasks: int):
+def build_workload(eng, n_tasks: int, job_s: float = JOB_S):
     """Submit a MolDyn-shaped workflow of ~n_tasks tasks; returns
-    (exact task count, final gather future)."""
+    (exact task count, final gather future).  `eng` is anything with the
+    engine submission surface (an `Engine` or a `FederatedEngine`);
+    benchmarks/federation.py reuses this builder with short jobs so the
+    federated-vs-single comparison runs the identical workload shape."""
     wf = Workflow("million", eng)
     molecules = max(1, round((n_tasks - 1) / JOBS_PER_MOL))
-    shared = eng.submit("annotate", None, duration=JOB_S)
+    shared = eng.submit("annotate", None, duration=job_s)
     finals = []
     for _ in range(molecules):
         f = shared
         for _ in range(SERIAL_PRE):
-            f = eng.submit("prep", None, [f], duration=JOB_S)
-        wide = [eng.submit("charmm", None, [f], duration=JOB_S)
+            f = eng.submit("prep", None, [f], duration=job_s)
+        wide = [eng.submit("charmm", None, [f], duration=job_s)
                 for _ in range(WIDE)]
         g = wf.gather(wide)
         for _ in range(SERIAL_POST):
-            g = eng.submit("post", None, [g], duration=JOB_S)
+            g = eng.submit("post", None, [g], duration=job_s)
         finals.append(g)
     return 1 + molecules * JOBS_PER_MOL, wf.gather(finals)
 

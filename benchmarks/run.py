@@ -34,6 +34,7 @@ MODULES = [
     "benchmarks.roofline",             # §Roofline (from dry-run artifacts)
     "benchmarks.million_tasks",        # scheduler scale (smoke-sized here)
     "benchmarks.data_diffusion",       # §6: cache-aware data layer
+    "benchmarks.federation",           # §8: multi-engine federation
 ]
 
 

@@ -12,10 +12,13 @@ Public API:
 """
 from repro.core.datastore import (DataLayer, DataObject, EvictionPolicy,
                                   ExecutorCache, LFUPolicy, LRUPolicy,
-                                  SharedStore, SizeAwarePolicy,
-                                  StagingCostModel)
+                                  ShardDirectory, SharedStore,
+                                  SizeAwarePolicy, StagingCostModel)
 from repro.core.engine import Engine
 from repro.core.falkon import DRPConfig, FalkonConfig, FalkonService
+from repro.core.federation import (FederatedEngine, Mailbox,
+                                   ShardedDataLayer, WorkStealer,
+                                   hash_partitioner, skewed_partitioner)
 from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
 from repro.core.futures import DataFuture, resolved, when_all
 from repro.core.metrics import StreamStat
@@ -43,7 +46,9 @@ __all__ = [
     "VDC", "InvocationRecord", "LoadBalancer", "Site", "StreamStat",
     "DataLayer", "DataObject", "SharedStore", "ExecutorCache",
     "StagingCostModel", "EvictionPolicy", "LRUPolicy", "LFUPolicy",
-    "SizeAwarePolicy",
+    "SizeAwarePolicy", "ShardDirectory",
+    "FederatedEngine", "Mailbox", "WorkStealer", "ShardedDataLayer",
+    "hash_partitioner", "skewed_partitioner",
     "Dataset", "Mapper", "ListMapper", "FileSystemMapper", "CSVMapper",
     "ShardMapper", "PhysicalRef", "Struct", "ArrayOf", "Primitive",
     "INT", "FLOAT", "STRING", "FILE",

@@ -387,6 +387,44 @@ class ExecutorCache:
 # the data layer
 # ---------------------------------------------------------------------------
 
+class ShardDirectory:
+    """Cross-shard holder directory (DESIGN.md §8): object name -> set of
+    shard ids with at least one executor caching it.
+
+    This is the *small* half of the sharded holder index: per-executor
+    holder maps stay inside each shard's `DataLayer` (they are the hot,
+    per-dispatch structure), while the directory answers the federation's
+    coarse question — "does shard S hold object X at all?" — in O(1) for
+    steal-time restage pricing.  Entries are maintained at shard
+    granularity (first holder in a shard adds it, last holder drops it),
+    so the directory is bounded by live objects x shards, independent of
+    executor count and task count.
+    """
+
+    def __init__(self):
+        self._map: dict[str, set[int]] = {}
+
+    def add(self, name: str, shard: int | None) -> None:
+        self._map.setdefault(name, set()).add(shard)
+
+    def drop(self, name: str, shard: int | None) -> None:
+        shards = self._map.get(name)
+        if shards is not None:
+            shards.discard(shard)
+            if not shards:
+                del self._map[name]
+
+    def shards_holding(self, name: str) -> frozenset:
+        return frozenset(self._map.get(name, ()))
+
+    def holds(self, name: str, shard: int | None) -> bool:
+        shards = self._map.get(name)
+        return shards is not None and shard in shards
+
+    def __len__(self):
+        return len(self._map)
+
+
 class DataLayer:
     """Cache-aware data management bound to one Falkon service.
 
@@ -404,6 +442,14 @@ class DataLayer:
                  probe_limit: int = 8, affinity_frac: float = 0.5,
                  max_local_queue: int = 128, park_patience: float = 96.0):
         self.shared = shared or SharedStore()
+        # holder-index sharding (DESIGN.md §8): when this layer is one
+        # shard of a `ShardedDataLayer`, `directory` is the federation's
+        # cross-shard directory and `shard_id` this layer's shard; the
+        # directory tracks only *which shards* hold an object (first
+        # holder appears / last holder drops), so it stays small while the
+        # per-executor holder maps stay shard-local
+        self.shard_id: int | None = None
+        self.directory = None
         self.cost = cost or StagingCostModel()
         self.cache_capacity = float(cache_capacity)
         self.policy = policy
@@ -440,12 +486,15 @@ class DataLayer:
         if cache is None:
             return
         for name in cache.objects:
-            holders = self._holders.get(name)
-            if holders is not None:
-                holders.pop(e.id, None)
-                if not holders:
-                    del self._holders[name]
+            self._drop_holder(name, e)
         e.cache = None
+
+    # -- holder-index queries -------------------------------------------------
+    def holds(self, name: str) -> bool:
+        """True when at least one registered executor caches `name` —
+        O(1); used by the balancer's affinity term and by cross-shard
+        restage accounting."""
+        return name in self._holders
 
     # -- cache-aware placement ----------------------------------------------
     def pick_home(self, task, now: float):
@@ -560,7 +609,12 @@ class DataLayer:
                 if cache is not None:
                     admitted, evicted = cache.admit(obj)
                     if admitted:
-                        self._holders.setdefault(obj.name, {})[e.id] = e
+                        holders = self._holders.get(obj.name)
+                        if holders is None:
+                            self._holders[obj.name] = holders = {}
+                            if self.directory is not None:
+                                self.directory.add(obj.name, self.shard_id)
+                        holders[e.id] = e
                     for ev in evicted:
                         self._drop_holder(ev.name, e)
             if cache is not None:
@@ -588,6 +642,8 @@ class DataLayer:
             holders.pop(e.id, None)
             if not holders:
                 del self._holders[name]
+                if self.directory is not None:
+                    self.directory.drop(name, self.shard_id)
 
     # -- metrics -------------------------------------------------------------
     def hit_rate(self) -> float:

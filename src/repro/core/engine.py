@@ -36,9 +36,77 @@ from repro.core.sites import LoadBalancer, Site
 from repro.core.task import Task, task_key
 
 __all__ = [
-    "Engine", "Task", "Provider", "WorkerPoolProvider", "LocalProvider",
-    "BatchSchedulerProvider", "FalkonProvider", "ClusteringProvider",
+    "Engine", "ReadyQueue", "Task", "Provider", "WorkerPoolProvider",
+    "LocalProvider", "BatchSchedulerProvider", "FalkonProvider",
+    "ClusteringProvider",
 ]
+
+
+class ReadyQueue:
+    """Held ready tasks, bucketed per app.
+
+    The drain pass visits each app bucket head-first and stops at the
+    first unplaceable task, so a blocked app costs O(1) instead of
+    shuffling its whole backlog through the deque — with a standing
+    backlog of K tasks (a federation shard holding excess work for the
+    stealer) the seed's flat deque made every completion O(K).  Buckets
+    preserve per-app FIFO; iteration order is app first-arrival order
+    (dict insertion), deterministic under `SimClock`.
+
+    `steal(n)` is the work-migration interface (DESIGN.md §8): pops up to
+    n entries from the *newest* end, largest bucket first, so the victim
+    keeps its oldest work in order and the thief gets work least likely
+    to be locality-bound.  O(apps + n) per call.
+    """
+
+    __slots__ = ("_buckets", "_len")
+
+    def __init__(self):
+        self._buckets: dict = {}
+        self._len = 0
+
+    def __len__(self) -> int:
+        return self._len
+
+    def __bool__(self) -> bool:
+        return self._len > 0
+
+    def append(self, item) -> None:
+        app = item[0].app
+        bucket = self._buckets.get(app)
+        if bucket is None:
+            self._buckets[app] = bucket = deque()
+        bucket.append(item)
+        self._len += 1
+
+    def buckets(self):
+        """(app, deque) pairs; snapshot so callers may drop empty buckets."""
+        return list(self._buckets.items())
+
+    def pop_head(self, app) -> None:
+        """Drop the head of `app`'s bucket (after a successful placement)."""
+        bucket = self._buckets[app]
+        bucket.popleft()
+        self._len -= 1
+        if not bucket:
+            del self._buckets[app]
+
+    def steal(self, n: int) -> list:
+        """Pop up to n entries from the newest end, largest bucket first."""
+        out = []
+        while len(out) < n and self._len:
+            # apps are few (workflow-level); max over the bucket dict is
+            # O(apps), ties broken by first-arrival order (deterministic)
+            app = max(self._buckets, key=lambda a: len(self._buckets[a]))
+            bucket = self._buckets[app]
+            take = min(len(bucket), n - len(out))
+            for _ in range(take):
+                out.append(bucket.pop())
+            self._len -= take
+            if not bucket:
+                del self._buckets[app]
+        out.reverse()                  # restore ready order for the thief
+        return out
 
 
 class Engine:
@@ -62,8 +130,17 @@ class Engine:
         # feeds sites as they turn jobs around, letting responsiveness
         # scores steer the split — paper §3.13)
         self.site_slack = 2.0
-        self._pending: deque = deque()
+        self._pending = ReadyQueue()
         self._drain_scheduled = False
+        # federation hooks (DESIGN.md §8): set by FederatedEngine.attach.
+        # `_hold_excess` keeps ready tasks beyond the site throttle in
+        # `_pending` even with a single site, so a WorkStealer has a
+        # migratable backlog; the notify hooks are O(1)-guarded calls into
+        # the federation on backlog growth / local starvation.  All three
+        # are inert (one attribute test per event) outside a federation.
+        self.shard_id: int | None = None
+        self._federation = None
+        self._hold_excess = False
         # provenance="summary" keeps the VDC aggregate counters but skips
         # per-invocation records — required for bounded-memory 10^6-task runs
         if provenance not in ("records", "summary"):
@@ -73,9 +150,13 @@ class Engine:
 
     # ------------------------------------------------------------------
     def add_site(self, name: str, provider: Provider, capacity: int = 1,
-                 apps: set[str] | None = None) -> Site:
+                 apps: set[str] | None = None, data_layer=None) -> Site:
         site = Site(name, provider, capacity, apps)
         self.balancer.add_site(site)
+        if data_layer is not None:
+            # cache-aware balancing: pick() will boost this site for tasks
+            # whose declared inputs its executors already hold
+            self.balancer.set_affinity(name, data_layer)
         return site
 
     def local_site(self, concurrency: int = 1) -> Site:
@@ -154,6 +235,8 @@ class Engine:
         if not self._place(task, exclude_site):
             # every valid site is at its throttle: hold in the ready queue
             self._pending.append((task, exclude_site))
+            if self._federation is not None:
+                self._federation.notify_backlog(self)
 
     def _place(self, task: Task, exclude_site: str | None = None) -> bool:
         """Try to hand the task to a site; False means *hold* (valid sites
@@ -165,10 +248,14 @@ class Engine:
             return True  # consumed (failed), not held
         now = self.clock.now()
         # throttle only matters when there is a choice to steer: with a
-        # single site the provider's own queue is the right place to wait
+        # single site the provider's own queue is the right place to wait —
+        # unless this engine is a federation shard (`_hold_excess`), where
+        # excess ready work stays in `_pending` so it can be stolen
         site = self.balancer.pick(task.app, now,
-                                  require_room=len(cands) > 1,
-                                  slack=self.site_slack)
+                                  require_room=(len(cands) > 1
+                                                or self._hold_excess),
+                                  slack=self.site_slack,
+                                  inputs=task.inputs or None)
         if site is None:
             return False
         if site.name == exclude_site:
@@ -188,28 +275,30 @@ class Engine:
         """Batched drain: after completions free capacity, dispatch *every*
         pending task that now has room, in one pass.  The seed engine popped
         a single task per completion, which both cost one clock event per
-        task and head-of-line-blocked apps whose site had no room."""
+        task and head-of-line-blocked apps whose site had no room.  The
+        per-app buckets make the pass O(apps + placed): an app whose sites
+        are full is skipped at its bucket head, its backlog untouched."""
         self._drain_scheduled = False
         pending = self._pending
-        blocked: set = set()
-        held: list = []
-        for _ in range(len(pending)):
-            task, excl = pending.popleft()
-            if task.app in blocked:
-                held.append((task, excl))
-            elif not self._place(task, excl):
-                blocked.add(task.app)
-                held.append((task, excl))
-        if held:
-            pending.extendleft(reversed(held))
+        for app, bucket in pending.buckets():
+            while bucket:
+                task, excl = bucket[0]
+                if not self._place(task, excl):
+                    break              # app blocked; leave its backlog be
+                pending.pop_head(app)
 
     def _done(self, task: Task, ok: bool, value, err):
         site = task.site
         now = self.clock.now()
         site.outstanding -= 1
-        if self._pending and not self._drain_scheduled:
-            self._drain_scheduled = True
-            self.clock.schedule(0.0, self._drain_pending)
+        if self._pending:
+            if not self._drain_scheduled:
+                self._drain_scheduled = True
+                self.clock.schedule(0.0, self._drain_pending)
+        elif self._federation is not None:
+            # shard starving: no held backlog left — let the federation's
+            # stealer consider migrating work here (flag-guarded, O(1))
+            self._federation.notify_idle(self)
         if ok:
             site.on_success(now - task.submit_time)
             self.tasks_completed += 1

@@ -45,6 +45,14 @@ class DRPConfig:
 @dataclasses.dataclass
 class FalkonConfig:
     dispatch_overhead: float = 1.0 / 487.0   # paper: 487 tasks/s streamlined
+    # serialize_dispatch=True models the dispatcher as a serial resource:
+    # task starts are gated at one per `dispatch_overhead`, so a single
+    # service saturates at the paper's 487 tasks/s no matter how many
+    # executors it feeds (§4: the measured number is a *dispatcher*
+    # throughput ceiling).  This is the regime multi-engine federation
+    # (DESIGN.md §8) exists for — N shard services give N dispatchers.
+    # Default False keeps the seed's per-task-overhead timing exactly.
+    serialize_dispatch: bool = False
     drp: DRPConfig = dataclasses.field(default_factory=DRPConfig)
     host_fail_threshold: int = 2
     host_suspend_time: float = 60.0
@@ -93,6 +101,7 @@ class FalkonService:
         self._next_eid = 0
         self._allocating = 0
         self._last_shrink_scan = float("-inf")
+        self._dispatcher_free_at = 0.0   # serialize_dispatch gate
         self._parked = 0   # tasks waiting in executor affinity queues
         # metrics — bounded summaries always on; raw logs only under trace
         self.peak_queue = 0
@@ -276,6 +285,15 @@ class FalkonService:
         e.busy = True
         self.dispatched += 1
         overhead = self.cfg.dispatch_overhead
+        if self.cfg.serialize_dispatch:
+            # the dispatcher is a serial resource (paper §4: 487 tasks/s is
+            # a dispatcher ceiling): this task waits for the dispatcher to
+            # free, then occupies it for one dispatch_overhead
+            now = self.clock.now()
+            gate = self._dispatcher_free_at
+            wait = gate - now if gate > now else 0.0
+            self._dispatcher_free_at = now + wait + overhead
+            overhead = wait + overhead
         dl = self.data_layer
         # input staging: cached inputs are read locally, the rest staged
         # from the shared store (and cached for the next task); the I/O time

@@ -1,0 +1,494 @@
+"""Multi-engine federation: shard one workflow across N engines
+(DESIGN.md §8).
+
+The paper scales one Swift/Karajan engine feeding one Falkon service; its
+own application campaigns (§5 — MolDyn, fMRI) want *many* cooperating
+engines.  The binding constraint is the dispatcher: Falkon's measured 487
+tasks/s (§4) is a per-service ceiling, so past ~500 short tasks/s one
+engine cannot keep any pool busy no matter how large.  Federation shards
+the dataflow graph across N `Engine` shards — each a full engine with its
+own `LoadBalancer`, sites, and (typically) one Falkon service per pod —
+giving N dispatchers, with three cross-shard mechanisms:
+
+  * `Mailbox`          — cross-shard future delivery: a consumer shard
+                         blocks on a local proxy that resolves in one
+                         coalesced clock event when the producing shard
+                         completes (optionally after a delivery latency),
+                         never on the producer's internal state.
+  * `WorkStealer`      — migrates *pending-ready* tasks (the engine's held
+                         ready queue) from overloaded shards to idle ones:
+                         steal-half of the victim's deque in one bounded
+                         batch, amortized O(1) per task, O(shards) per
+                         steal event, never a per-task scan.
+  * `ShardedDataLayer` — the data-diffusion holder index (§7) shards with
+                         the engines: per-shard holder maps plus a small
+                         cross-shard `ShardDirectory`, so locality-driven
+                         dispatch keeps working after a steal — a migrated
+                         task re-routes to holders in its *new* shard or
+                         pays the staging cost `StagingCostModel` prices
+                         (the stealer reports those restage bytes through
+                         bounded `StreamStat` metrics).
+
+Scale contracts: per-task federation overhead is O(1) (one partitioner
+hash, one ownership-dict update, O(args) proxy checks); steal passes cost
+O(shards + batch); mailbox flushes are one event per delivery window; all
+federation metrics are bounded counters / `StreamStat` reservoirs.
+Everything is deterministic under `SimClock` — the default partitioner
+uses crc32, not Python's seeded `hash`.
+
+`FederatedEngine` duck-types `Engine` (`submit`, `run`, `clock`,
+`tasks_completed`, `stats`), so `Workflow` — including `foreach`
+expansion at runtime — runs over a federation transparently.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Optional
+from zlib import crc32
+
+from repro.core.datastore import (DataLayer, ShardDirectory, SharedStore,
+                                  StagingCostModel)
+from repro.core.engine import Engine
+from repro.core.futures import DataFuture
+from repro.core.metrics import StreamStat
+from repro.core.simclock import Clock, SimClock
+
+__all__ = [
+    "FederatedEngine", "Mailbox", "WorkStealer", "ShardedDataLayer",
+    "hash_partitioner", "skewed_partitioner",
+]
+
+
+def hash_partitioner(key: str, n_shards: int) -> int:
+    """Default partitioner: stable hash of the task key.  crc32, not
+    `hash()` — Python string hashing is per-process randomized and would
+    break SimClock replay determinism."""
+    return crc32(key.encode()) % n_shards
+
+
+def skewed_partitioner(heavy_frac: float, heavy_shard: int = 0) -> Callable:
+    """A deliberately imbalanced partitioner: `heavy_frac` of all keys land
+    on `heavy_shard`, the rest spread over the other shards.  Used by the
+    federation benchmark/tests to exercise work stealing."""
+    cut = int(heavy_frac * 1000)
+
+    def part(key: str, n_shards: int) -> int:
+        h = crc32(key.encode())
+        if h % 1000 < cut or n_shards <= 1:
+            return heavy_shard % n_shards
+        other = (h // 1000) % (n_shards - 1)
+        return other if other < heavy_shard else other + 1
+
+    return part
+
+
+class Mailbox:
+    """Cross-shard completion delivery for one consumer shard.
+
+    Producers post (proxy, source-future) pairs at resolution time; each
+    message is delivered no earlier than `latency` simulated seconds after
+    its post (the modeled inter-pod transport time) and messages that come
+    due at the same flush share one clock event — a same-instant burst of
+    cross-shard completions costs one event, not one per edge, while a
+    message posted late in an open window still waits its *own* full
+    latency (the flush re-schedules for the not-yet-due tail).  Failures
+    propagate: a failed source fails its proxies, and the consumer
+    engine's upstream-failure path handles the rest.
+    """
+
+    def __init__(self, clock: Clock, shard_id: int, latency: float = 0.0):
+        self.clock = clock
+        self.shard_id = shard_id
+        self.latency = latency
+        self._queue: deque = deque()    # (ready_at, proxy, src), time-sorted
+        self._flush_at = None
+        self.messages = 0
+        self.flushes = 0
+        self.batch_stat = StreamStat(cap=256)   # messages per flush
+
+    def post(self, proxy: DataFuture, src: DataFuture) -> None:
+        now = self.clock.now()
+        # posts arrive in clock order, so the deque stays sorted by ready_at
+        self._queue.append((now + self.latency, proxy, src))
+        self.messages += 1
+        if self._flush_at is None:
+            self._flush_at = now + self.latency
+            self.clock.schedule(self.latency, self._flush)
+
+    def _flush(self) -> None:
+        self._flush_at = None
+        queue = self._queue
+        now = self.clock.now()
+        # deliver everything already due; resolving proxies can trigger
+        # submissions that post new messages — those land behind the due
+        # prefix with a strictly later ready_at, so the loop terminates
+        batch = 0
+        while queue and queue[0][0] <= now + 1e-12:
+            _, proxy, src = queue.popleft()
+            batch += 1
+            if src.failed:
+                proxy.set_error(src._error)
+            else:
+                proxy.set(src.get())
+        self.flushes += 1
+        self.batch_stat.observe(now, batch)
+        if queue and (self._flush_at is None or queue[0][0] < self._flush_at):
+            # undelivered tail (posted mid-window): wake when its own
+            # latency elapses.  A mid-flush post may already have scheduled
+            # a wake, but possibly later than this head needs — an extra
+            # earlier event is harmless (a flush delivers only what is due)
+            self._flush_at = queue[0][0]
+            self.clock.schedule(max(0.0, queue[0][0] - now), self._flush)
+
+    def metrics(self) -> dict:
+        return {
+            "messages": self.messages,
+            "flushes": self.flushes,
+            "batch": self.batch_stat.summary(),
+        }
+
+
+class WorkStealer:
+    """Steal-half work migration between federation shards.
+
+    A steal pass runs as one coalesced clock event (flag-guarded `poke`),
+    scans the O(shards) load vector, and for each idle thief (no held
+    backlog, free balancer capacity — the `LoadBalancer.idle_slots` steal
+    interface) migrates half of the most-loaded shard's pending-ready
+    deque, bounded by `max_batch`, in one batch.  Tasks are popped from
+    the *back* of the victim's deque (newest-ready first), so the victim
+    keeps draining its oldest work in order; migration itself is
+    `thief._dispatch(task)` — the thief's balancer, throttle, and data
+    layer take over from there.
+
+    Steal-induced restage cost: with a `ShardedDataLayer` attached, each
+    migrated task's inputs are priced against the cross-shard directory
+    (held in the victim shard but not the thief's -> restage bytes) and
+    reported through a bounded `StreamStat` — an O(inputs) lookup per
+    migrated task, no executor or task scans.
+    """
+
+    def __init__(self, clock: Clock, min_batch: int = 2,
+                 max_batch: int = 4096, interval: float = 0.0):
+        self.clock = clock
+        self.min_batch = max(1, min_batch)
+        self.max_batch = max_batch
+        self.interval = interval
+        self.fed: Optional["FederatedEngine"] = None
+        self._scheduled = False
+        self.steals = 0              # batches migrated
+        self.tasks_stolen = 0
+        self.passes = 0              # rebalance events (incl. no-ops)
+        self.restage_bytes_est = 0.0
+        self.batch_stat = StreamStat(cap=256)     # tasks per steal batch
+        self.restage_stat = StreamStat(cap=256)   # restage bytes per batch
+
+    def attach(self, fed: "FederatedEngine") -> None:
+        self.fed = fed
+
+    def poke(self) -> None:
+        """Request a steal pass; coalesced — at most one scheduled at a
+        time, so pokes are O(1) however often load changes."""
+        if not self._scheduled:
+            self._scheduled = True
+            self.clock.schedule(self.interval, self._rebalance)
+
+    def _rebalance(self) -> None:
+        fed = self.fed
+        if fed is None:
+            self._scheduled = False
+            return
+        self.passes += 1
+        now = self.clock.now()
+        shards = fed.shards
+        sdl = fed.data_layer
+        for thief in shards:
+            if thief._pending or thief.balancer.idle_slots(now) <= 0:
+                continue
+            victim = max(shards, key=lambda s: len(s._pending))
+            if victim is thief or len(victim._pending) < self.min_batch:
+                continue
+            n = min(len(victim._pending) // 2, self.max_batch)
+            if n <= 0:
+                continue
+            batch = victim._pending.steal(n)
+            moved = []
+            restage = 0.0
+            for task, excl in batch:
+                # heterogeneous shards: only migrate what the thief can run
+                if not thief.balancer.any_valid(task.app):
+                    victim._pending.append((task, excl))
+                    continue
+                moved.append(task)
+                if sdl is not None and task.inputs:
+                    restage += sdl.restage_estimate(
+                        task.inputs, victim.shard_id, thief.shard_id)
+            if not moved:
+                continue
+            self.steals += 1
+            self.tasks_stolen += len(moved)
+            self.batch_stat.observe(now, len(moved))
+            if sdl is not None:
+                self.restage_bytes_est += restage
+                self.restage_stat.observe(now, restage)
+            for task in moved:
+                # exclude_site names are victim-local; the thief's balancer
+                # places (or holds) the task fresh
+                thief._dispatch(task)
+        self._scheduled = False
+
+    def metrics(self) -> dict:
+        return {
+            "steals": self.steals,
+            "tasks_stolen": self.tasks_stolen,
+            "passes": self.passes,
+            "restage_bytes_est": self.restage_bytes_est,
+            "batch": self.batch_stat.summary(),
+            "restage_per_batch": self.restage_stat.summary(),
+        }
+
+
+class ShardedDataLayer:
+    """Data-diffusion layer sharded alongside the engines (DESIGN.md §8).
+
+    One `DataLayer` per shard — each bound to that shard's Falkon service
+    via ``FalkonService(data_layer=sdl.layer(i))`` — all sharing one
+    `SharedStore` and `StagingCostModel`, plus one cross-shard
+    `ShardDirectory`.  Per-dispatch holder lookups stay entirely
+    shard-local (same O(inputs x probe_limit) contract as §7); the
+    directory only answers the federation-level question "which shards
+    hold X", used to price steal-induced restaging.
+    """
+
+    def __init__(self, n_shards: int, shared: SharedStore | None = None,
+                 cost: StagingCostModel | None = None,
+                 cache_capacity: float = 1e9, policy="lru", **layer_kw):
+        self.shared = shared or SharedStore()
+        self.cost = cost or StagingCostModel()
+        self.directory = ShardDirectory()
+        self.shards: list[DataLayer] = []
+        for i in range(n_shards):
+            dl = DataLayer(self.shared, self.cost,
+                           cache_capacity=cache_capacity, policy=policy,
+                           **layer_kw)
+            dl.shard_id = i
+            dl.directory = self.directory
+            self.shards.append(dl)
+
+    def layer(self, shard_id: int) -> DataLayer:
+        return self.shards[shard_id]
+
+    def restage_estimate(self, inputs, src: int, dst: int) -> float:
+        """Bytes a task migrated src -> dst must re-stage: inputs held
+        somewhere in the source shard but nowhere in the destination shard
+        (O(inputs) cross-shard directory probes — this is the query the
+        directory exists for; per-executor holder maps stay shard-local)."""
+        if src == dst:
+            return 0.0
+        directory = self.directory
+        bytes_ = 0.0
+        for obj in inputs:
+            if directory.holds(obj.name, src) and \
+                    not directory.holds(obj.name, dst):
+                bytes_ += obj.size
+        return bytes_
+
+    def metrics(self) -> dict:
+        per_shard = [dl.metrics() for dl in self.shards]
+        return {
+            "directory_objects": len(self.directory),
+            "hits": sum(m["hits"] for m in per_shard),
+            "misses": sum(m["misses"] for m in per_shard),
+            "bytes_staged": sum(m["bytes_staged"] for m in per_shard),
+            "bytes_local": sum(m["bytes_local"] for m in per_shard),
+            "shards": per_shard,
+        }
+
+
+class FederatedEngine:
+    """Shard one dataflow graph across N `Engine`s sharing a clock.
+
+    Duck-types the `Engine` surface the DSL uses (`submit`, `run`,
+    `clock`, aggregate counters), so ``Workflow("w", FederatedEngine(4))``
+    — `foreach`, `gather`, `when`, atomic procedures — works unchanged.
+
+    * **Partitioning** — each submission is routed by
+      ``partitioner(task_key, n_shards)`` (default: crc32 hash of the
+      key).  Keys are federation-assigned (`name#counter`) unless the
+      caller passes one, so partitioning is deterministic and pluggable
+      (e.g. `skewed_partitioner` for imbalance experiments, or a
+      domain partitioner that keeps a molecule's pipeline on one shard).
+    * **Cross-shard futures** — an argument future produced by another
+      shard is replaced by a shard-local proxy delivered through the
+      consumer shard's `Mailbox`: the consumer blocks only on the
+      producing shard's completion event (plus `delivery_latency`), and
+      one proxy is shared by all consumers on the same shard.  Futures
+      with no owning shard — workflow combinators (`gather` / `foreach` /
+      `when`) resolve driver-side — cross the driver->shard transport
+      the same way, so high-fan-in joins also pay delivery latency and
+      count in `cross_shard_edges`.  Ownership bookkeeping is dropped as
+      futures resolve, so the map is bounded by *in-flight* futures, not
+      by workflow size.
+    * **Work stealing** — shards hold excess ready work in their pending
+      queue (`_hold_excess`); `notify_idle`/`notify_backlog` hooks poke
+      the `WorkStealer`, which migrates steal-half batches to idle
+      shards.  Pass ``steal=False`` (or ``stealer=None`` explicitly) for
+      a partition-only federation.
+    """
+
+    def __init__(self, shards: int | list[Engine],
+                 clock: Clock | None = None,
+                 partitioner: Callable[[str, int], int] | None = None,
+                 data_layer: ShardedDataLayer | None = None,
+                 stealer: WorkStealer | None = None, steal: bool = True,
+                 delivery_latency: float = 0.0,
+                 engine_kwargs: dict | None = None):
+        if isinstance(shards, int):
+            if shards < 1:
+                raise ValueError("need at least one shard")
+            self.clock = clock or SimClock()
+            shards = [Engine(self.clock, **(engine_kwargs or {}))
+                      for _ in range(shards)]
+        else:
+            shards = list(shards)
+            if not shards:
+                raise ValueError("need at least one shard")
+            self.clock = clock or shards[0].clock
+            for eng in shards:
+                if eng.clock is not self.clock:
+                    raise ValueError("all shards must share one clock")
+        self.shards = shards
+        self.partitioner = partitioner or hash_partitioner
+        self.data_layer = data_layer
+        self.mailboxes = [Mailbox(self.clock, i, delivery_latency)
+                          for i in range(len(shards))]
+        self.stealer = stealer if stealer is not None else (
+            WorkStealer(self.clock) if steal else None)
+        if self.stealer is not None:
+            self.stealer.attach(self)
+        for i, eng in enumerate(shards):
+            eng.shard_id = i
+            eng._federation = self
+            eng._hold_excess = True
+        self.tasks_submitted = 0
+        self.cross_shard_edges = 0
+        self._owner: dict[int, int] = {}          # future id -> shard
+        self._proxies: dict[tuple, DataFuture] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, name: str, fn=None, args: list | None = None,
+               duration: float | None = None, app: str | None = None,
+               durable: bool = False, key: str | None = None,
+               vmap_key=None, inputs=None) -> DataFuture:
+        args = args or []
+        if key is None:
+            key = f"{name}#{self.tasks_submitted}"
+        self.tasks_submitted += 1
+        shard = self.partitioner(key, len(self.shards))
+        routed = args
+        for idx, a in enumerate(args):
+            if isinstance(a, DataFuture) and not a.done:
+                # owner None = a workflow-combinator future (gather /
+                # foreach / when run driver-side, not on a shard): those
+                # joins cross the driver->shard transport too, so they
+                # proxy through the consumer's mailbox exactly like a
+                # future produced by another shard
+                if self._owner.get(a.id) != shard:
+                    if routed is args:
+                        routed = list(args)
+                    routed[idx] = self._proxy(a, shard)
+        out = self.shards[shard].submit(
+            name, fn, routed, duration=duration, app=app, durable=durable,
+            key=key, vmap_key=vmap_key, inputs=inputs)
+        if not out.done:                 # restart-log hits resolve eagerly
+            self._owner[out.id] = shard
+            out.on_done(self._forget)
+        return out
+
+    def _forget(self, f: DataFuture) -> None:
+        self._owner.pop(f.id, None)
+
+    def _proxy(self, fut: DataFuture, consumer: int) -> DataFuture:
+        """Shard-local stand-in for a future owned by another shard; one
+        proxy per (future, consumer shard), delivered via the mailbox."""
+        pkey = (fut.id, consumer)
+        p = self._proxies.get(pkey)
+        if p is None:
+            p = DataFuture(name=f"{fut.name}@shard{consumer}")
+            self._proxies[pkey] = p
+            self.cross_shard_edges += 1
+            mbox = self.mailboxes[consumer]
+            fut.on_done(lambda f, p=p, m=mbox: m.post(p, f))
+            p.on_done(lambda _p, k=pkey: self._proxies.pop(k, None))
+        return p
+
+    # -- stealer hooks (called from Engine._dispatch/_done) -------------
+    def notify_backlog(self, eng: Engine) -> None:
+        """A shard just held another ready task.  Cheap-gated: only looks
+        for an idle thief when the backlog first becomes stealable and
+        every 256 tasks after, so per-task cost stays O(1)."""
+        st = self.stealer
+        if st is None or st._scheduled:
+            return
+        lp = len(eng._pending)
+        if lp != st.min_batch and lp & 0xFF:
+            return
+        now = self.clock.now()
+        for s in self.shards:
+            if (s is not eng and not s._pending
+                    and s.balancer.idle_slots(now) > 0):
+                st.poke()
+                return
+
+    def notify_idle(self, eng: Engine) -> None:
+        """A shard finished a task with no held backlog left — steal if any
+        other shard has a stealable queue (O(shards) length checks)."""
+        st = self.stealer
+        if st is None or st._scheduled:
+            return
+        mb = st.min_batch
+        for s in self.shards:
+            if s is not eng and len(s._pending) >= mb:
+                st.poke()
+                return
+
+    # ------------------------------------------------------------------
+    def run(self):
+        if self.stealer is not None:
+            self.stealer.poke()          # initial probe (skewed bootstraps)
+        self.clock.run()
+
+    @property
+    def tasks_completed(self) -> int:
+        return sum(e.tasks_completed for e in self.shards)
+
+    @property
+    def tasks_failed(self) -> int:
+        return sum(e.tasks_failed for e in self.shards)
+
+    def stats(self) -> dict:
+        return {
+            "submitted": self.tasks_submitted,
+            "completed": self.tasks_completed,
+            "failed": self.tasks_failed,
+            "shards": len(self.shards),
+            "per_shard_completed": [e.tasks_completed for e in self.shards],
+            "cross_shard_edges": self.cross_shard_edges,
+            "makespan": self.clock.now(),
+        }
+
+    def metrics(self) -> dict:
+        """Bounded federation snapshot — safe at any task count."""
+        m = {
+            "shards": len(self.shards),
+            "submitted": self.tasks_submitted,
+            "completed": self.tasks_completed,
+            "cross_shard_edges": self.cross_shard_edges,
+            "mailboxes": [mb.metrics() for mb in self.mailboxes],
+            "in_flight_owned": len(self._owner),
+        }
+        if self.stealer is not None:
+            m["stealer"] = self.stealer.metrics()
+        if self.data_layer is not None:
+            m["data"] = self.data_layer.metrics()
+        return m

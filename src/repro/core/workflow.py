@@ -9,16 +9,29 @@
 
 Implicit parallelism: procedures return futures immediately; data
 dependencies alone order execution (pipelining, §3.13).
+
+The DSL is engine-shape-agnostic: a `Workflow` binds to anything exposing
+the engine submission surface (`submit(...)` returning a `DataFuture`,
+`run()`, `clock`) — a single `Engine` or a multi-shard `FederatedEngine`
+(DESIGN.md §8).  In particular `foreach` expands at *runtime* through
+`engine.submit`, so over a federation each expanded body task is
+partitioned to a shard as it is created, and cross-shard data
+dependencies are carried by the federation's mailbox proxies with no
+change to workflow code.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import TYPE_CHECKING, Any, Callable, Union
 
 from repro.core.datastore import inputs_of
 from repro.core.engine import Engine
 from repro.core.futures import DataFuture, resolved, when_all
 from repro.core.xdtm import Dataset, Mapper, typecheck
+
+if TYPE_CHECKING:
+    from repro.core.federation import FederatedEngine
+    AnyEngine = Union[Engine, "FederatedEngine"]
 
 
 class Procedure:
@@ -66,7 +79,7 @@ class Procedure:
 
 
 class Workflow:
-    def __init__(self, name: str, engine: Engine):
+    def __init__(self, name: str, engine: "AnyEngine"):
         self.name = name
         self.engine = engine
 

@@ -1,0 +1,415 @@
+"""Unit tests for the federation subsystem (DESIGN.md §8):
+
+  * partitioning — deterministic hash partitioner, pluggable partitioners,
+    federation-wide dataflow correctness across shards;
+  * cross-shard futures — mailbox proxy delivery (values and failures),
+    coalesced flush events, bounded ownership bookkeeping;
+  * work stealing — steal-half batches under a skewed partition, bounded
+    per-shard idle time, thief eligibility via the LoadBalancer steal
+    interface, app-validity guard;
+  * sharded data layer — cross-shard directory maintenance, steal-time
+    restage pricing, bounded StreamStat steal metrics;
+  * determinism — identical replays under SimClock;
+  * serialized dispatch — the 487 tasks/s dispatcher ceiling that makes
+    N shards beat one engine, default-off timing unchanged.
+"""
+import pytest
+
+from repro.core import (DataObject, DRPConfig, Engine, FalkonConfig,
+                        FalkonProvider, FalkonService, FederatedEngine,
+                        LocalProvider, ShardedDataLayer, SimClock, Workflow,
+                        hash_partitioner, skewed_partitioner)
+from repro.core.federation import WorkStealer
+
+
+def _falkon_shard(clock, execs=8, alloc=1.0, data_layer=None,
+                  serialize=False):
+    return FalkonService(clock, FalkonConfig(
+        serialize_dispatch=serialize,
+        drp=DRPConfig(max_executors=execs, alloc_latency=alloc,
+                      alloc_chunk=execs)), data_layer=data_layer)
+
+
+def _federation(n_shards=4, execs=8, partitioner=None, steal=True,
+                data_layer=None, serialize=False, delivery_latency=0.0):
+    clock = SimClock()
+    fed = FederatedEngine(n_shards, clock=clock, partitioner=partitioner,
+                          steal=steal, data_layer=data_layer,
+                          delivery_latency=delivery_latency,
+                          engine_kwargs={"provenance": "summary"})
+    svcs = []
+    for i, eng in enumerate(fed.shards):
+        dl = data_layer.layer(i) if data_layer is not None else None
+        svc = _falkon_shard(clock, execs, data_layer=dl,
+                            serialize=serialize)
+        eng.add_site(f"falkon{i}", FalkonProvider(svc), capacity=execs,
+                     data_layer=dl)
+        svcs.append(svc)
+    return clock, fed, svcs
+
+
+# ---------------------------------------------------------------------------
+# partitioning + transparent workflow
+# ---------------------------------------------------------------------------
+
+def test_hash_partitioner_is_stable_and_spreads():
+    shards = [hash_partitioner(f"job#{i}", 4) for i in range(4000)]
+    assert shards == [hash_partitioner(f"job#{i}", 4) for i in range(4000)]
+    counts = [shards.count(s) for s in range(4)]
+    assert all(700 < c < 1300 for c in counts)   # roughly uniform
+
+
+def test_skewed_partitioner_is_skewed():
+    part = skewed_partitioner(0.7)
+    shards = [part(f"job#{i}", 4) for i in range(4000)]
+    heavy = shards.count(0)
+    assert 0.6 < heavy / len(shards) < 0.8
+    assert set(shards) == {0, 1, 2, 3}
+
+
+def test_workflow_runs_transparently_over_federation():
+    """foreach / gather / dependent chains through a FederatedEngine, with
+    every value crossing shards correctly."""
+    clock, fed, _ = _federation(n_shards=3)
+    wf = Workflow("t", fed)
+
+    @wf.atomic(duration=0.1)
+    def double(x):
+        return 2 * x
+
+    @wf.atomic(duration=0.1)
+    def add(a, b):
+        return a + b
+
+    pairs = wf.foreach(list(range(20)),
+                       lambda i: add(double(i), double(i + 1)))
+    fed.run()
+    assert pairs.resolved
+    assert pairs.get() == [2 * i + 2 * (i + 1) for i in range(20)]
+    assert fed.tasks_completed == 60       # 3 tasks per foreach item
+    # the graph really was sharded, not funneled to one engine
+    per_shard = fed.stats()["per_shard_completed"]
+    assert all(c > 0 for c in per_shard) and sum(per_shard) == 60
+
+
+def test_cross_shard_failure_propagates():
+    clock, fed, _ = _federation(n_shards=2,
+                                partitioner=lambda key, n:
+                                0 if key.startswith("boom") else 1)
+
+    def boom():
+        raise RuntimeError("upstream died")
+
+    bad = fed.submit("boom", boom, duration=0.1)
+    child = fed.submit("child", None, [bad], duration=0.1)  # other shard
+    fed.run()
+    assert bad.failed and child.failed
+    assert fed.tasks_failed == 2
+
+
+def test_custom_partitioner_controls_placement():
+    clock, fed, _ = _federation(n_shards=2, steal=False,
+                                partitioner=lambda key, n: 1)
+    outs = [fed.submit(f"t{i}", None, duration=0.1) for i in range(10)]
+    fed.run()
+    assert all(o.resolved for o in outs)
+    assert fed.stats()["per_shard_completed"] == [0, 10]
+
+
+# ---------------------------------------------------------------------------
+# mailbox
+# ---------------------------------------------------------------------------
+
+def test_mailbox_coalesces_deliveries():
+    """A wide fan-out consuming one cross-shard future must not cost one
+    clock event per edge: one proxy per (future, shard), one flush per
+    delivery window."""
+    clock, fed, _ = _federation(n_shards=2, steal=False,
+                                partitioner=lambda key, n:
+                                0 if key.startswith("src") else 1)
+    src = fed.submit("src", None, duration=1.0)
+    outs = [fed.submit(f"w{i}", None, [src], duration=0.1)
+            for i in range(64)]
+    fed.run()
+    assert all(o.resolved for o in outs)
+    mb = fed.mailboxes[1]
+    # 64 consumers share one proxy -> one message, one flush
+    assert fed.cross_shard_edges == 1
+    assert mb.messages == 1 and mb.flushes == 1
+
+
+def test_mailbox_delivery_latency_delays_consumers():
+    def span(latency):
+        clock, fed, _ = _federation(n_shards=2, steal=False,
+                                    delivery_latency=latency,
+                                    partitioner=lambda key, n:
+                                    0 if key.startswith("a") else 1)
+        b = fed.submit("b", None, [fed.submit("a", None, duration=1.0)],
+                       duration=1.0)
+        fed.run()
+        assert b.resolved
+        return clock.now()
+
+    assert span(5.0) - span(0.0) == pytest.approx(5.0)
+
+
+def test_mailbox_late_window_message_waits_full_latency():
+    """A message posted while an earlier flush window is open must still
+    wait its own full latency, not ride the first message's event."""
+    from repro.core.federation import Mailbox
+    from repro.core.futures import DataFuture, resolved
+
+    clock = SimClock()
+    mb = Mailbox(clock, shard_id=0, latency=5.0)
+    p1, p2 = DataFuture("p1"), DataFuture("p2")
+    delivered = {}
+    p1.on_done(lambda f: delivered.setdefault("p1", clock.now()))
+    p2.on_done(lambda f: delivered.setdefault("p2", clock.now()))
+    mb.post(p1, resolved(1))                      # t=0 -> due t=5
+    clock.schedule(4.9, lambda: mb.post(p2, resolved(2)))  # due t=9.9
+    clock.run()
+    assert delivered["p1"] == pytest.approx(5.0)
+    assert delivered["p2"] == pytest.approx(9.9)
+    assert p1.get() == 1 and p2.get() == 2
+
+
+def test_gather_joins_pay_delivery_latency():
+    """Workflow-combinator futures (gather et al.) are driver-owned: a
+    task consuming one on any shard still crosses the modeled transport,
+    so high-fan-in joins cannot sidestep delivery latency."""
+    def span(latency):
+        clock, fed, _ = _federation(n_shards=2, steal=False,
+                                    delivery_latency=latency)
+        wf = Workflow("t", fed)
+        wide = [fed.submit(f"w{i}", None, duration=1.0) for i in range(8)]
+        g = wf.gather(wide)
+        post = fed.submit("post", None, [g], duration=1.0)
+        fed.run()
+        assert post.resolved
+        return clock.now()
+
+    # one driver->shard hop for the gather join (the wide tasks are roots)
+    assert span(3.0) - span(0.0) == pytest.approx(3.0)
+
+
+def test_ownership_map_stays_bounded():
+    """Owner bookkeeping is dropped as futures resolve — bounded by
+    in-flight futures, not workflow size."""
+    clock, fed, _ = _federation(n_shards=2)
+    f = fed.submit("t0", None, duration=0.1)
+    for i in range(1, 200):
+        f = fed.submit(f"t{i}", None, [f], duration=0.1)
+    fed.run()
+    assert f.resolved
+    assert len(fed._owner) == 0
+    assert len(fed._proxies) == 0
+
+
+# ---------------------------------------------------------------------------
+# work stealing
+# ---------------------------------------------------------------------------
+
+def _skewed_run(steal, n=800, execs=4):
+    clock, fed, svcs = _federation(n_shards=4, execs=execs,
+                                   partitioner=skewed_partitioner(0.8),
+                                   steal=steal)
+    wf = Workflow("t", fed)
+    out = wf.gather([fed.submit(f"job{i}", None, duration=1.0)
+                     for i in range(n)])
+    fed.run()
+    assert out.resolved and fed.tasks_completed == n
+    return clock, fed, svcs
+
+
+def test_stealing_bounds_idle_fraction_under_skew():
+    clock_ns, fed_ns, svcs_ns = _skewed_run(steal=False)
+    clock_st, fed_st, svcs_st = _skewed_run(steal=True)
+    st = fed_st.metrics()["stealer"]
+    assert st["tasks_stolen"] > 0 and st["steals"] > 0
+    # steal-half batches, not per-task events
+    assert st["steals"] <= st["tasks_stolen"]
+    assert clock_st.now() < clock_ns.now() * 0.6
+    # every shard did real work once stealing is on
+    per_shard = fed_st.stats()["per_shard_completed"]
+    assert min(per_shard) > 0.5 * max(per_shard)
+    assert min(fed_ns.stats()["per_shard_completed"]) < \
+        0.2 * max(fed_ns.stats()["per_shard_completed"])
+
+
+def test_steal_batches_are_bounded():
+    clock, fed, _ = _federation(n_shards=2, execs=2,
+                                partitioner=lambda key, n: 0)
+    fed.stealer.max_batch = 8
+    outs = [fed.submit(f"j{i}", None, duration=1.0) for i in range(200)]
+    fed.run()
+    assert all(o.resolved for o in outs)
+    st = fed.stealer
+    assert st.tasks_stolen > 0
+    assert st.batch_stat.peak <= 8
+
+
+def test_stealer_respects_app_validity():
+    """A thief whose sites cannot run an app must not receive its tasks."""
+    clock = SimClock()
+    fed = FederatedEngine(2, clock=clock, partitioner=lambda key, n: 0,
+                          engine_kwargs={"provenance": "summary"})
+    fed.shards[0].add_site("s0", LocalProvider(clock, 2), capacity=2,
+                           apps={"special"})
+    fed.shards[1].add_site("s1", LocalProvider(clock, 2), capacity=2,
+                           apps={"other"})
+    outs = [fed.submit(f"j{i}", None, duration=1.0, app="special")
+            for i in range(40)]
+    fed.run()
+    assert all(o.resolved for o in outs)
+    assert fed.stats()["per_shard_completed"] == [40, 0]
+    assert fed.stealer.tasks_stolen == 0
+
+
+def test_steal_disabled_is_partition_only():
+    clock, fed, _ = _federation(n_shards=2, steal=False,
+                                partitioner=lambda key, n: 0)
+    outs = [fed.submit(f"j{i}", None, duration=1.0) for i in range(50)]
+    fed.run()
+    assert all(o.resolved for o in outs)
+    assert fed.stealer is None
+    assert fed.stats()["per_shard_completed"] == [50, 0]
+
+
+# ---------------------------------------------------------------------------
+# sharded data layer
+# ---------------------------------------------------------------------------
+
+def test_directory_tracks_cross_shard_holders():
+    sdl = ShardedDataLayer(2, cache_capacity=1e9)
+    clock, fed, svcs = _federation(n_shards=2, data_layer=sdl, steal=False,
+                                   partitioner=lambda key, n:
+                                   0 if key.startswith("a") else 1)
+    f0 = sdl.shared.file("x.dat", 10e6)
+    a = fed.submit("a", None, duration=0.5, inputs=(f0,))
+    b = fed.submit("b", None, duration=0.5, inputs=(f0,))
+    fed.run()
+    assert a.resolved and b.resolved
+    assert sdl.directory.shards_holding("x.dat") == frozenset({0, 1})
+    assert sdl.layer(0).holds("x.dat") and sdl.layer(1).holds("x.dat")
+    assert len(sdl.directory) == 1
+    m = sdl.metrics()
+    assert m["misses"] == 2 and m["directory_objects"] == 1
+
+
+def test_restage_estimate_prices_cross_shard_migration():
+    sdl = ShardedDataLayer(2, cache_capacity=1e9)
+    x, y = DataObject("x.dat", 10e6), DataObject("y.dat", 5e6)
+    # fabricate directory state: shard 0 holds both, shard 1 holds y
+    sdl.directory.add("x.dat", 0)
+    sdl.directory.add("y.dat", 0)
+    sdl.directory.add("y.dat", 1)
+    assert sdl.restage_estimate((x, y), 0, 1) == 10e6   # x must restage
+    assert sdl.restage_estimate((x, y), 1, 0) == 0.0    # 0 already holds
+    assert sdl.restage_estimate((x, y), 0, 0) == 0.0    # no migration
+
+
+def test_stolen_tasks_restage_in_new_shard():
+    """After a warm round, stolen tasks re-route to holders in the thief
+    shard or stage replicas there — and the stealer's restage metrics are
+    bounded StreamStat summaries, not per-task logs."""
+    sdl = ShardedDataLayer(4, cache_capacity=200e6, park_patience=8.0)
+    clock, fed, svcs = _federation(n_shards=4, execs=4, data_layer=sdl,
+                                   partitioner=skewed_partitioner(0.8))
+    wf = Workflow("t", fed)
+    archives = [sdl.shared.file(f"m{i}.arc", 100e6) for i in range(32)]
+    analyze = wf.sim_proc("analyze", duration=1.0,
+                          inputs=lambda m, *_: (archives[m],))
+    barrier = None
+    for _ in range(3):
+        futs = [analyze(j % 32) if barrier is None
+                else analyze(j % 32, barrier) for j in range(256)]
+        barrier = wf.gather(futs)
+    fed.run()
+    assert barrier.resolved
+    st = fed.metrics()["stealer"]
+    assert st["tasks_stolen"] > 0
+    assert st["restage_bytes_est"] > 0.0
+    # bounded metrics: fixed-size summaries regardless of task count
+    assert len(fed.stealer.restage_stat.sample) < fed.stealer.restage_stat.cap
+    assert st["restage_per_batch"]["count"] == st["steals"]
+    # work actually diffused into thief shards' caches
+    assert len(sdl.directory.shards_holding("m0.arc")) >= 2
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def _deterministic_probe():
+    sdl = ShardedDataLayer(4, cache_capacity=400e6)
+    clock, fed, svcs = _federation(n_shards=4, execs=4, data_layer=sdl,
+                                   partitioner=skewed_partitioner(0.7))
+    wf = Workflow("t", fed)
+    files = [sdl.shared.file(f"f{i}.dat", 50e6) for i in range(8)]
+    proc = wf.sim_proc("p", duration=0.5, inputs=lambda i: (files[i % 8],))
+    out = wf.foreach(list(range(400)), lambda i: proc(i))
+    fed.run()
+    assert out.resolved
+    m = fed.metrics()
+    return (clock.now(), fed.stats()["per_shard_completed"],
+            m["stealer"]["tasks_stolen"], m["stealer"]["steals"],
+            m["data"]["bytes_staged"], m["cross_shard_edges"],
+            [sorted(e.cache.objects) for svc in svcs
+             for e in svc.executors])
+
+
+def test_federation_is_deterministic_under_simclock():
+    assert _deterministic_probe() == _deterministic_probe()
+
+
+# ---------------------------------------------------------------------------
+# serialized dispatch (the dispatcher ceiling federation exists for)
+# ---------------------------------------------------------------------------
+
+def test_serialized_dispatch_caps_service_throughput():
+    def makespan(serialize):
+        clock = SimClock()
+        svc = _falkon_shard(clock, execs=64, alloc=1.0,
+                            serialize=serialize)
+        eng = Engine(clock, provenance="summary")
+        eng.add_site("f", FalkonProvider(svc), capacity=64)
+        outs = [eng.submit(f"t{i}", None, duration=0.0)
+                for i in range(487)]
+        eng.run()
+        assert all(o.resolved for o in outs)
+        return clock.now()
+
+    serialized = makespan(True)
+    parallel = makespan(False)
+    # 487 zero-length tasks through one serialized dispatcher ~ 1 s
+    # (net of the 1 s allocation latency both configurations pay)
+    assert serialized - 1.0 == pytest.approx(1.0, abs=0.1)
+    # default-off path: dispatch overheads overlap across executors
+    assert parallel - 1.0 < (serialized - 1.0) / 4
+
+
+def test_federation_beats_single_engine_when_dispatch_bound():
+    n = 2000
+
+    def single():
+        clock = SimClock()
+        svc = _falkon_shard(clock, execs=256, alloc=1.0, serialize=True)
+        eng = Engine(clock, provenance="summary")
+        eng.add_site("f", FalkonProvider(svc), capacity=256)
+        wf = Workflow("t", eng)
+        out = wf.gather([eng.submit(f"t{i}", None, duration=0.1)
+                         for i in range(n)])
+        eng.run()
+        assert out.resolved
+        return clock.now()
+
+    def federated():
+        clock, fed, _ = _federation(n_shards=4, execs=64, serialize=True)
+        wf = Workflow("t", fed)
+        out = wf.gather([fed.submit(f"t{i}", None, duration=0.1)
+                         for i in range(n)])
+        fed.run()
+        assert out.resolved
+        return clock.now()
+
+    assert single() / federated() >= 1.5

@@ -1,0 +1,226 @@
+"""Unit tests for sites + load balancing (DESIGN.md §3, paper §3.13):
+
+  * `sites_for` cache invalidation when sites are added mid-run;
+  * suspended-site skip in `pick`;
+  * proportional-weight equilibrium (the Fig 11 score/capacity split);
+  * deterministic tie-breaking (earliest-registered site, stable under
+    SimClock — not dict/insertion luck);
+  * the data-affinity term: sites holding a task's inputs are boosted,
+    priced against the StagingCostModel, and the no-inputs path is
+    behaviorally identical to the score-only balancer;
+  * the `idle_slots` steal interface.
+"""
+import pytest
+
+from repro.core import (DataLayer, DataObject, Engine, LocalProvider,
+                        SharedStore, SimClock, StagingCostModel, Workflow)
+from repro.core.sites import LoadBalancer, Site, _affinity_boost
+
+
+def _site(name, capacity=1, score=1.0, apps=None):
+    return Site(name, provider=None, capacity=capacity, apps=apps,
+                score=score)
+
+
+# ---------------------------------------------------------------------------
+# per-app index invalidation
+# ---------------------------------------------------------------------------
+
+def test_sites_for_cache_invalidates_on_add_site():
+    lb = LoadBalancer([_site("a", apps={"x"})])
+    assert [s.name for s in lb.sites_for("x")] == ["a"]
+    assert [s.name for s in lb.sites_for("y")] == []
+    # a site added after the cache was populated must appear immediately,
+    # including in the previously-empty candidate list
+    lb.add_site(_site("b", apps={"x", "y"}))
+    assert [s.name for s in lb.sites_for("x")] == ["a", "b"]
+    assert [s.name for s in lb.sites_for("y")] == ["b"]
+    # a catch-all site (apps=None) joins every candidate list
+    lb.add_site(_site("c"))
+    assert [s.name for s in lb.sites_for("x")] == ["a", "b", "c"]
+    assert [s.name for s in lb.sites_for("zzz")] == ["c"]
+
+
+def test_add_site_mid_run_is_picked_up_by_engine():
+    """The engine-level view of the staleness hazard: a site added while
+    tasks are in flight serves subsequent dispatches."""
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.add_site("first", LocalProvider(clock, 1), capacity=1)
+    first = eng.submit("t0", None, duration=10.0)
+
+    def add_late():
+        eng.add_site("late", LocalProvider(clock, 4), capacity=4)
+
+    clock.schedule(1.0, add_late)
+    late = []
+
+    def submit_late():
+        late.extend(eng.submit(f"l{i}", None, duration=1.0)
+                    for i in range(4))
+
+    clock.schedule(2.0, submit_late)
+    eng.run()
+    assert first.resolved and all(o.resolved for o in late)
+    # the late tasks ran on the new site (done at t=3), not behind the
+    # 10 s task on the original site
+    assert clock.now() == pytest.approx(10.0)
+    assert eng.balancer.sites[1].stats.completed == 4
+
+
+# ---------------------------------------------------------------------------
+# pick: suspension, equilibrium, determinism
+# ---------------------------------------------------------------------------
+
+def test_pick_skips_suspended_sites():
+    a, b = _site("a"), _site("b")
+    lb = LoadBalancer([a, b])
+    a.suspended_until = 100.0
+    assert lb.pick(None, now=50.0) is b
+    assert lb.pick(None, now=100.0) is a      # suspension lapsed, tie -> a
+    b.suspended_until = 100.5
+    a.suspended_until = 100.5
+    assert lb.pick(None, now=100.0) is None   # everyone suspended
+
+
+def test_pick_weight_is_proportional_to_score_and_capacity():
+    """Fig 11 shape: under saturation, backlog settles proportional to
+    score x capacity — the higher-weight site keeps winning until its
+    queue depth eats its advantage."""
+    fast = _site("fast", capacity=4, score=2.0)
+    slow = _site("slow", capacity=2, score=1.0)
+    lb = LoadBalancer([fast, slow])
+    picks = {"fast": 0, "slow": 0}
+    for _ in range(30):
+        s = lb.pick(None, now=0.0)
+        s.outstanding += 1
+        picks[s.name] += 1
+    # weight ratio 8:2 -> fast absorbs ~4x the backlog at equilibrium
+    assert picks["fast"] / picks["slow"] == pytest.approx(4.0, rel=0.25)
+    # queue-depth equilibrium: final backlogs sit near the weight ratio
+    assert fast.outstanding / slow.outstanding == pytest.approx(4.0,
+                                                                rel=0.25)
+
+
+def test_fig11_two_site_split_under_engine():
+    """End-to-end Fig 11 shape: two equal-score sites with 2:1 capacity
+    split a wide workload roughly 2:1."""
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.add_site("big", LocalProvider(clock, 8), capacity=8)
+    eng.add_site("small", LocalProvider(clock, 4), capacity=4)
+    wf = Workflow("t", eng)
+    out = wf.gather([eng.submit(f"t{i}", None, duration=1.0)
+                     for i in range(480)])
+    eng.run()
+    assert out.resolved
+    big, small = eng.balancer.sites
+    assert big.stats.completed + small.stats.completed == 480
+    ratio = big.stats.completed / small.stats.completed
+    assert ratio == pytest.approx(2.0, rel=0.3)
+
+
+def test_pick_tie_breaks_to_earliest_registered_site():
+    """Equal-weight candidates must resolve by registration order — the
+    documented deterministic tie-break — every time."""
+    sites = [_site(f"s{i}") for i in range(5)]
+    lb = LoadBalancer(sites)
+    assert all(lb.pick(None, now=0.0) is sites[0] for _ in range(10))
+    # loading s0 shifts the tie to the next-registered site, not to an
+    # arbitrary dict ordering
+    sites[0].outstanding = 1
+    assert lb.pick(None, now=0.0) is sites[1]
+
+
+# ---------------------------------------------------------------------------
+# data-affinity term
+# ---------------------------------------------------------------------------
+
+def _layer_with_holders(names):
+    dl = DataLayer(SharedStore(), StagingCostModel(), cache_capacity=1e9)
+    dl._holders = {n: {0: None} for n in names}
+    return dl
+
+
+def test_pick_prefers_site_holding_inputs():
+    a, b = _site("a"), _site("b")
+    lb = LoadBalancer([a, b])
+    obj = DataObject("x.dat", 200e6)
+    lb.set_affinity("b", _layer_with_holders(["x.dat"]))
+    # without inputs the tie resolves to a (registration order) ...
+    assert lb.pick(None, now=0.0) is a
+    # ... with inputs the holder site wins despite registration order
+    assert lb.pick(None, now=0.0, inputs=(obj,)) is b
+
+
+def test_affinity_boost_is_priced_against_staging_cost():
+    cost = StagingCostModel()
+    dl = _layer_with_holders(["x.dat"])
+    big, small = DataObject("x.dat", 500e6), DataObject("x.dat", 1e3)
+    # full coverage: the boost IS the shared-vs-local read-time ratio the
+    # cost model prices — bandwidth-bound for the 500 MB archive (~4x),
+    # latency-bound for the 1 KB file (~10x)
+    for obj in (big, small):
+        expected = cost.shared_read_time(obj.size) / \
+            cost.local_read_time(obj.size)
+        assert _affinity_boost(dl, (obj,)) == pytest.approx(expected)
+        assert expected > 1.0
+    expected = cost.shared_read_time(big.size) / cost.local_read_time(big.size)
+    # partial coverage scales the advantage by covered bytes
+    other = DataObject("y.dat", 500e6)
+    assert _affinity_boost(dl, (big, other)) == \
+        pytest.approx(1.0 + 0.5 * (expected - 1.0), rel=0.01)
+    # no coverage -> exactly no boost
+    assert _affinity_boost(_layer_with_holders([]), (big,)) == 1.0
+
+
+def test_no_inputs_path_is_unchanged_by_affinity_registration():
+    """Registering a data layer must not perturb placement of tasks with
+    no declared inputs — pick-for-pick identical to an unregistered
+    balancer, including tie-breaks."""
+    def run_picks(register):
+        sites = [_site(f"s{i}", capacity=2, score=1.0 + 0.1 * i)
+                 for i in range(4)]
+        lb = LoadBalancer(sites)
+        if register:
+            lb.set_affinity("s2", _layer_with_holders(["x.dat"]))
+        order = []
+        for _ in range(40):
+            s = lb.pick(None, now=0.0)
+            s.outstanding += 1
+            order.append(s.name)
+        return order
+
+    assert run_picks(register=True) == run_picks(register=False)
+
+
+def test_affinity_respects_require_room_and_suspension():
+    holder = _site("holder", capacity=1)
+    other = _site("other", capacity=1)
+    lb = LoadBalancer([holder, other])
+    lb.set_affinity("holder", _layer_with_holders(["x.dat"]))
+    obj = DataObject("x.dat", 200e6)
+    holder.outstanding = 2      # over 1 x slack=2.0 throttle
+    assert lb.pick(None, now=0.0, require_room=True, slack=2.0,
+                   inputs=(obj,)) is other
+    holder.outstanding = 0
+    holder.suspended_until = 10.0
+    assert lb.pick(None, now=0.0, inputs=(obj,)) is other
+
+
+# ---------------------------------------------------------------------------
+# steal interface
+# ---------------------------------------------------------------------------
+
+def test_idle_slots_counts_free_nonsuspended_capacity():
+    a = _site("a", capacity=4)
+    b = _site("b", capacity=2)
+    lb = LoadBalancer([a, b])
+    assert lb.idle_slots(now=0.0) == 6
+    a.outstanding = 3
+    assert lb.idle_slots(now=0.0) == 3
+    b.suspended_until = 5.0
+    assert lb.idle_slots(now=0.0) == 1
+    assert lb.idle_slots(now=5.0) == 3       # suspension lapsed
+    a.outstanding = 10                        # over-subscribed: clamps at 0
+    assert lb.idle_slots(now=5.0) == 2
