@@ -33,34 +33,50 @@ import argparse
 import inspect
 import json
 import os
-import resource
 import subprocess
 import sys
 import tempfile
 import time
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if __package__ in (None, ""):           # direct / subprocess invocation:
+    # *append* so an explicit PYTHONPATH (the --baseline subprocess points
+    # it at an archived old tree) keeps winning for `repro`
+    sys.path.append(os.path.join(_REPO_ROOT, "src"))
+    sys.path.append(_REPO_ROOT)
+
 from repro.core import (BatchSchedulerProvider, DRPConfig, Engine,
                         FalkonConfig, FalkonProvider, FalkonService,
                         SimClock, Workflow)
+
+from benchmarks.common import run_measured
 
 SERIAL_PRE, WIDE, SERIAL_POST = 3, 68, 13
 JOBS_PER_MOL = SERIAL_PRE + WIDE + SERIAL_POST      # 84, as in MolDyn
 JOB_S = 168.0                                       # ~paper job duration
 
-_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-
-def build_workload(eng, n_tasks: int, job_s: float = JOB_S):
+def build_workload(eng, n_tasks: int, job_s: float = JOB_S,
+                   window: int | None = None):
     """Submit a MolDyn-shaped workflow of ~n_tasks tasks; returns
-    (exact task count, final gather future).  `eng` is anything with the
+    (exact task count, final output future).  `eng` is anything with the
     engine submission surface (an `Engine` or a `FederatedEngine`);
     benchmarks/federation.py reuses this builder with short jobs so the
-    federated-vs-single comparison runs the identical workload shape."""
+    federated-vs-single comparison runs the identical workload shape.
+
+    ``window=None`` materializes the whole graph up front (the seed
+    behavior: memory is O(task count)).  ``window=k`` expands through a
+    streaming `foreach` (DESIGN.md §9): at most k molecule pipelines are
+    in flight at once — refilled as molecules complete, throttled further
+    by the engine's submit-side backpressure — each pipeline grows its
+    wide and post stages via `then` continuations only as the previous
+    stage resolves, and per-molecule results are counted, not retained,
+    so memory is bounded by the *runnable* frontier, not the graph."""
     wf = Workflow("million", eng)
     molecules = max(1, round((n_tasks - 1) / JOBS_PER_MOL))
     shared = eng.submit("annotate", None, duration=job_s)
-    finals = []
-    for _ in range(molecules):
+
+    def eager_molecule(_m):
         f = shared
         for _ in range(SERIAL_PRE):
             f = eng.submit("prep", None, [f], duration=job_s)
@@ -69,8 +85,30 @@ def build_workload(eng, n_tasks: int, job_s: float = JOB_S):
         g = wf.gather(wide)
         for _ in range(SERIAL_POST):
             g = eng.submit("post", None, [g], duration=job_s)
-        finals.append(g)
-    return 1 + molecules * JOBS_PER_MOL, wf.gather(finals)
+        return g
+
+    def streaming_molecule(_m):
+        f = shared
+        for _ in range(SERIAL_PRE):
+            f = eng.submit("prep", None, [f], duration=job_s)
+
+        def fan_out(_v, pre=f):
+            wide = [eng.submit("charmm", None, [pre], duration=job_s)
+                    for _ in range(WIDE)]
+            g = wf.gather(wide, keep_results=False)
+            for _ in range(SERIAL_POST):
+                g = eng.submit("post", None, [g], duration=job_s)
+            return g
+
+        return wf.then(f, fan_out)
+
+    if window is None:
+        finals = [eager_molecule(m) for m in range(molecules)]
+        out = wf.gather(finals)
+    else:
+        out = wf.foreach(range(molecules), streaming_molecule,
+                         window=window, keep_results=False)
+    return 1 + molecules * JOBS_PER_MOL, out
 
 
 def _supports(callable_, param: str) -> bool:
@@ -103,28 +141,25 @@ def make_engine(provider: str, executors: int):
     return eng
 
 
-def measure(provider: str, n_tasks: int, executors: int) -> dict:
+def measure(provider: str, n_tasks: int, executors: int,
+            window: int | None = None) -> dict:
     t0 = time.monotonic()
     eng = make_engine(provider, executors)
-    n, out = build_workload(eng, n_tasks)
+    n, out = build_workload(eng, n_tasks, window=window)
     build_s = time.monotonic() - t0
-    t1 = time.monotonic()
-    eng.run()
-    run_s = time.monotonic() - t1
-    assert out.resolved, f"workflow did not complete ({provider})"
-    assert eng.tasks_completed == n
+    m = run_measured(eng, out, n, sample_interval=JOB_S / 4.0)
     wall = time.monotonic() - t0
-    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
     return {
         "provider": provider,
         "tasks": n,
         "executors": executors,
+        "window": window,
         "wall_s": round(wall, 3),
         "build_s": round(build_s, 3),
-        "run_s": round(run_s, 3),
+        "run_s": round(m["run_s"], 3),
         "tasks_per_s": round(n / wall, 1),
-        "makespan_sim_s": round(eng.clock.now(), 1),
-        "peak_rss_mb": round(rss_mb, 1),
+        "makespan_sim_s": round(m["makespan_sim_s"], 1),
+        "peak_rss_mb": round(m["peak_rss_mb"], 1),
     }
 
 
@@ -171,6 +206,9 @@ def main() -> int:
     p.add_argument("--providers", default="falkon,batch")
     p.add_argument("--executors", type=int, default=2048,
                    help="pool size (paper runs Falkon up to 54k executors)")
+    p.add_argument("--window", type=int, default=None,
+                   help="streaming expansion: max molecule pipelines in "
+                        "flight (default: eager, whole graph up front)")
     p.add_argument("--baseline", default=None, metavar="GIT_REV",
                    help="also measure the engine at this git revision on "
                         "the same workload (subprocess) and report speedup")
@@ -181,7 +219,8 @@ def main() -> int:
     args = p.parse_args()
 
     providers = [s.strip() for s in args.providers.split(",") if s.strip()]
-    rows = [measure(prov, args.tasks, args.executors) for prov in providers]
+    rows = [measure(prov, args.tasks, args.executors, window=args.window)
+            for prov in providers]
     report = {"rows": rows}
 
     if args.baseline:

@@ -35,6 +35,7 @@ MODULES = [
     "benchmarks.million_tasks",        # scheduler scale (smoke-sized here)
     "benchmarks.data_diffusion",       # §6: cache-aware data layer
     "benchmarks.federation",           # §8: multi-engine federation
+    "benchmarks.streaming_expansion",  # §9: windowed graph construction
 ]
 
 

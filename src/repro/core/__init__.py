@@ -18,9 +18,11 @@ from repro.core.engine import Engine
 from repro.core.falkon import DRPConfig, FalkonConfig, FalkonService
 from repro.core.federation import (FederatedEngine, Mailbox,
                                    ShardedDataLayer, WorkStealer,
-                                   hash_partitioner, skewed_partitioner)
+                                   hash_partitioner, inputs_partitioner,
+                                   skewed_partitioner)
 from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
-from repro.core.futures import DataFuture, resolved, when_all
+from repro.core.futures import (CompletionCounter, DataFuture, resolved,
+                                when_all)
 from repro.core.metrics import StreamStat
 from repro.core.provenance import VDC, InvocationRecord
 from repro.core.providers import (BatchSchedulerProvider, ClusteringProvider,
@@ -41,14 +43,15 @@ __all__ = [
     "Provider", "WorkerPoolProvider",
     "LocalProvider", "BatchSchedulerProvider", "FalkonProvider",
     "ClusteringProvider", "FalkonService", "FalkonConfig", "DRPConfig",
-    "DataFuture", "resolved", "when_all", "SimClock", "RealClock",
+    "DataFuture", "CompletionCounter", "resolved", "when_all",
+    "SimClock", "RealClock",
     "RestartLog", "FaultInjector", "RetryPolicy", "TaskFailure",
     "VDC", "InvocationRecord", "LoadBalancer", "Site", "StreamStat",
     "DataLayer", "DataObject", "SharedStore", "ExecutorCache",
     "StagingCostModel", "EvictionPolicy", "LRUPolicy", "LFUPolicy",
     "SizeAwarePolicy", "ShardDirectory",
     "FederatedEngine", "Mailbox", "WorkStealer", "ShardedDataLayer",
-    "hash_partitioner", "skewed_partitioner",
+    "hash_partitioner", "skewed_partitioner", "inputs_partitioner",
     "Dataset", "Mapper", "ListMapper", "FileSystemMapper", "CSVMapper",
     "ShardMapper", "PhysicalRef", "Struct", "ArrayOf", "Primitive",
     "INT", "FLOAT", "STRING", "FILE",

@@ -22,6 +22,7 @@ re-exported so existing imports of `repro.core.engine` keep resolving.
 from __future__ import annotations
 
 from collections import deque
+from functools import partial
 
 from repro.core.datastore import inputs_of
 from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
@@ -141,6 +142,13 @@ class Engine:
         self.shard_id: int | None = None
         self._federation = None
         self._hold_excess = False
+        # submit-side backpressure waiters (DESIGN.md §9): single-shot
+        # callbacks fired by `_done` when a completion leaves the engine
+        # unsaturated — the streaming-expansion refill loop parks here so
+        # the frontier resumes the moment the pool has room, not only when
+        # a whole body pipeline completes.  Empty-list check per completion
+        # when unused.
+        self._bp_waiters: list = []
         # provenance="summary" keeps the VDC aggregate counters but skips
         # per-invocation records — required for bounded-memory 10^6-task runs
         if provenance not in ("records", "summary"):
@@ -211,24 +219,92 @@ class Engine:
 
             task.fault_check = chk
         self.tasks_submitted += 1
-        futs = [a for a in args if isinstance(a, DataFuture)]
-        if not futs:
+        # dependency scan without per-task garbage: at frontier scale
+        # (10^6 in-flight tasks) the list + closure the seed allocated
+        # here were ~40% of per-task graph memory; `partial` carries the
+        # task reference in one small object instead
+        first = None
+        nfuts = 0
+        for a in args:
+            if isinstance(a, DataFuture):
+                nfuts += 1
+                if first is None:
+                    first = a
+        if nfuts == 0:
             self._dispatch(task)
-        elif len(futs) == 1:
+        elif nfuts == 1:
             # single dependency (serial chains): skip the when_all counter
-            futs[0].on_done(lambda _f: self._ready(task))
+            first.on_done(partial(self._ready, task))
         else:
-            when_all(futs, lambda: self._ready(task))
+            when_all((a for a in args if isinstance(a, DataFuture)),
+                     partial(self._ready, task))
         return out
 
+    # -- submit-side backpressure (DESIGN.md §9) -----------------------
+    def inflight(self) -> int:
+        """Tasks submitted but not yet finished (queued, held, or running)."""
+        return self.tasks_submitted - self.tasks_completed - self.tasks_failed
+
+    def ready_backlog(self) -> int:
+        """Ready tasks held because every valid site is throttled."""
+        return len(self._pending)
+
+    def pool_capacity(self) -> int:
+        """Total registered site capacity (executor slots)."""
+        return sum(s.capacity for s in self.balancer.sites)
+
+    def dispatchable(self) -> int:
+        """Dependency-free work the pool can chew on right now: tasks
+        handed to site providers (queued or running) plus the held ready
+        backlog.  Dependency-*blocked* tasks are excluded on purpose —
+        they occupy memory, not executors."""
+        return (sum(s.outstanding for s in self.balancer.sites)
+                + len(self._pending))
+
+    def saturated(self, slack: float | None = None) -> bool:
+        """Submit-side backpressure (DESIGN.md §9): True while the engine
+        already holds at least ``slack x pool capacity`` of *dispatchable*
+        work.  Streaming `foreach` expansion keys its refill loop on this,
+        so the standing frontier tracks pool capacity rather than a fixed
+        window constant — expanding further ahead than this grows the
+        graph, never the achieved throughput.  Keyed on dispatchable work,
+        not `inflight()`: a pipeline-shaped body contributes mostly
+        dependency-blocked tasks, and throttling on those would starve
+        the pool long before memory was a concern (the hard memory bound
+        is the window itself)."""
+        cap = self.pool_capacity()
+        if cap <= 0:
+            return False
+        if slack is None:
+            slack = self.site_slack
+        return self.dispatchable() >= slack * cap
+
+    def add_backpressure_waiter(self, cb) -> None:
+        """Register a single-shot callback fired when a completion leaves
+        the engine unsaturated (all waiters fire together)."""
+        self._bp_waiters.append(cb)
+
+    def _wake_backpressure(self) -> None:
+        if self._bp_waiters and not self.saturated():
+            waiters, self._bp_waiters = self._bp_waiters, []
+            for cb in waiters:
+                cb()
+
     # ------------------------------------------------------------------
-    def _ready(self, task: Task):
+    def _ready(self, task: Task, _f: DataFuture | None = None):
         for a in task.args:
             if isinstance(a, DataFuture) and a.failed:
                 task.output.set_error(
                     TaskFailure(f"upstream failure for {task.name}"))
                 self.tasks_failed += 1
+                task.args = ()
                 return
+        if task.fn is None and task.vmap_key is None:
+            # pure-sim task: the argument values are never read again, so
+            # drop them now — in a streaming (windowed) expansion this is
+            # what lets a resolved upstream chain be freed while its
+            # dependents are still queued (DESIGN.md §9 GC contract)
+            task.args = ()
         self._dispatch(task)
 
     def _dispatch(self, task: Task, exclude_site: str | None = None):
@@ -299,13 +375,22 @@ class Engine:
             # shard starving: no held backlog left — let the federation's
             # stealer consider migrating work here (flag-guarded, O(1))
             self._federation.notify_idle(self)
+        fed = self._federation
+        if fed is not None and fed._bp_waiters:
+            fed._wake_backpressure()
+        if self._bp_waiters:
+            # not elif: a workflow driven over one *shard* of a federation
+            # registers its waiters here, and they must still fire
+            self._wake_backpressure()
         if ok:
             site.on_success(now - task.submit_time)
             self.tasks_completed += 1
             self._record(task, "ok")
             if self.restart_log is not None and task.durable:
                 self.restart_log.append(task.key, value)
-            task.output.set(value)
+            task.args = ()             # resolved chains must be GC-able: a
+            task.fault_check = None    # retained record must not pin its
+            task.output.set(value)     # upstream futures (DESIGN.md §9)
             return
         # failure path (§3.12)
         site.on_failure()
@@ -317,6 +402,8 @@ class Engine:
                      error=str(err))
         if task.retries_left <= 0:
             self.tasks_failed += 1
+            task.args = ()
+            task.fault_check = None
             task.output.set_error(err or TaskFailure(f"{task.name} failed"))
             return
         task.retries_left -= 1

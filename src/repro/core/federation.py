@@ -47,7 +47,7 @@ from typing import Callable, Optional
 from zlib import crc32
 
 from repro.core.datastore import (DataLayer, ShardDirectory, SharedStore,
-                                  StagingCostModel)
+                                  StagingCostModel, inputs_of)
 from repro.core.engine import Engine
 from repro.core.futures import DataFuture
 from repro.core.metrics import StreamStat
@@ -55,7 +55,7 @@ from repro.core.simclock import Clock, SimClock
 
 __all__ = [
     "FederatedEngine", "Mailbox", "WorkStealer", "ShardedDataLayer",
-    "hash_partitioner", "skewed_partitioner",
+    "hash_partitioner", "skewed_partitioner", "inputs_partitioner",
 ]
 
 
@@ -80,6 +80,30 @@ def skewed_partitioner(heavy_frac: float, heavy_shard: int = 0) -> Callable:
         return other if other < heavy_shard else other + 1
 
     return part
+
+
+def inputs_partitioner(key: str, n_shards: int, inputs: tuple = ()) -> int:
+    """Affinity-aware partitioner (ROADMAP: affinity partitioning, first
+    half): tasks are keyed on their declared `DataObject` inputs, so tasks
+    sharing an input land on the same shard — that shard's data layer
+    caches the file once instead of every shard staging its own replica,
+    and cross-shard restaging after steals drops with it.
+
+    The anchor is the *largest* declared input (the one worth co-locating
+    for), ties broken by name; tasks with no declared inputs fall back to
+    the crc32 key hash, identical to `hash_partitioner`.  O(inputs) per
+    task, deterministic (crc32, not `hash()`).
+    """
+    if inputs:
+        anchor = max(inputs, key=lambda o: (o.size, o.name))
+        return crc32(anchor.name.encode()) % n_shards
+    return crc32(key.encode()) % n_shards
+
+
+# `FederatedEngine.submit` passes the task's normalized input tuple only to
+# partitioners that declare they want it, so plain `(key, n)` partitioners
+# keep working unchanged.
+inputs_partitioner.wants_inputs = True
 
 
 class Mailbox:
@@ -359,6 +383,8 @@ class FederatedEngine:
                     raise ValueError("all shards must share one clock")
         self.shards = shards
         self.partitioner = partitioner or hash_partitioner
+        self._partition_on_inputs = getattr(self.partitioner,
+                                            "wants_inputs", False)
         self.data_layer = data_layer
         self.mailboxes = [Mailbox(self.clock, i, delivery_latency)
                           for i in range(len(shards))]
@@ -374,6 +400,10 @@ class FederatedEngine:
         self.cross_shard_edges = 0
         self._owner: dict[int, int] = {}          # future id -> shard
         self._proxies: dict[tuple, DataFuture] = {}
+        # aggregate backpressure waiters (DESIGN.md §9): shard completions
+        # delegate the wake check here so the streaming frontier keys on
+        # federation-wide saturation, not one shard's
+        self._bp_waiters: list = []
 
     # ------------------------------------------------------------------
     def submit(self, name: str, fn=None, args: list | None = None,
@@ -384,7 +414,15 @@ class FederatedEngine:
         if key is None:
             key = f"{name}#{self.tasks_submitted}"
         self.tasks_submitted += 1
-        shard = self.partitioner(key, len(self.shards))
+        if self._partition_on_inputs:
+            # normalize once here (the shard engine skips re-normalizing
+            # tuples), so the affinity partitioner sees the DataObjects
+            if type(inputs) is not tuple:
+                inputs = inputs_of(inputs, *args) if inputs is not None \
+                    else ()
+            shard = self.partitioner(key, len(self.shards), inputs)
+        else:
+            shard = self.partitioner(key, len(self.shards))
         routed = args
         for idx, a in enumerate(args):
             if isinstance(a, DataFuture) and not a.done:
@@ -451,6 +489,47 @@ class FederatedEngine:
             if s is not eng and len(s._pending) >= mb:
                 st.poke()
                 return
+
+    # -- submit-side backpressure (DESIGN.md §9) -----------------------
+    def inflight(self) -> int:
+        """Tasks submitted but not yet finished, aggregated over shards."""
+        return sum(e.inflight() for e in self.shards)
+
+    def ready_backlog(self) -> int:
+        """Held ready tasks across all shards (the stealable backlog)."""
+        return sum(len(e._pending) for e in self.shards)
+
+    def pool_capacity(self) -> int:
+        return sum(e.pool_capacity() for e in self.shards)
+
+    def dispatchable(self) -> int:
+        return sum(e.dispatchable() for e in self.shards)
+
+    def saturated(self, slack: float | None = None) -> bool:
+        """Aggregate submit-side backpressure: the federation as a whole
+        already holds ≥ slack x aggregate pool capacity of dispatchable
+        work.  Aggregate, not per-shard: a skewed partition leaves some
+        shards starved while others hold backlog, and it is the stealer's
+        job to rebalance that — the streaming frontier should keep feeding
+        until the *federation* is full, or steals would have nothing to
+        migrate."""
+        cap = self.pool_capacity()
+        if cap <= 0:
+            return False
+        if slack is None:
+            slack = self.shards[0].site_slack
+        return self.dispatchable() >= slack * cap
+
+    def add_backpressure_waiter(self, cb) -> None:
+        """Single-shot callback fired when a shard completion leaves the
+        federation (in aggregate) unsaturated."""
+        self._bp_waiters.append(cb)
+
+    def _wake_backpressure(self) -> None:
+        if self._bp_waiters and not self.saturated():
+            waiters, self._bp_waiters = self._bp_waiters, []
+            for cb in waiters:
+                cb()
 
     # ------------------------------------------------------------------
     def run(self):

@@ -21,9 +21,13 @@ from __future__ import annotations
 import dataclasses
 import os
 import re
+import sys
 from typing import Any, Callable
 
-import numpy as np
+# numpy is imported lazily: it is only needed by `ShardMapper` and by
+# typechecks against numpy scalars, and a pure-scheduler process (the
+# streaming-expansion benchmarks, DESIGN.md §9) should not pay ~35 MB of
+# RSS for an import it never uses.
 
 
 # ---------------------------------------------------------------------------
@@ -54,10 +58,18 @@ FILE = Primitive("file")
 
 def typecheck(value: Any, t: Any) -> bool:
     if isinstance(t, Primitive):
+        # numpy scalars only exist if numpy is already imported, so the
+        # fallback probe via sys.modules never triggers the import itself
         if t.name == "int":
-            return isinstance(value, (int, np.integer))
+            if isinstance(value, int):
+                return True
+            np = sys.modules.get("numpy")
+            return np is not None and isinstance(value, np.integer)
         if t.name == "float":
-            return isinstance(value, (int, float, np.floating))
+            if isinstance(value, (int, float)):
+                return True
+            np = sys.modules.get("numpy")
+            return np is not None and isinstance(value, np.floating)
         if t.name == "string":
             return isinstance(value, str)
         if t.name == "file":
@@ -197,7 +209,8 @@ class ShardMapper(Mapper):
         return [PhysicalRef(self.shard_path(i), meta=("shard", i))
                 for i in range(self.n_shards)]
 
-    def save(self, array: np.ndarray) -> list[PhysicalRef]:
+    def save(self, array) -> list[PhysicalRef]:
+        import numpy as np
         os.makedirs(self.directory, exist_ok=True)
         parts = np.array_split(array, self.n_shards, axis=self.shard_axis)
         refs = []
@@ -206,7 +219,8 @@ class ShardMapper(Mapper):
             refs.append(PhysicalRef(self.shard_path(i), meta=("shard", i)))
         return refs
 
-    def load(self) -> np.ndarray:
+    def load(self):
+        import numpy as np
         parts = [np.load(self.shard_path(i))["data"]
                  for i in range(self.n_shards)]
         return np.concatenate(parts, axis=self.shard_axis)

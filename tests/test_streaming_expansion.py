@@ -1,0 +1,591 @@
+"""Streaming (windowed) workflow expansion — DESIGN.md §9.
+
+Covers: window refill order and determinism under `SimClock`, lazy
+generator / `Dataset` collections, failure mid-window, `reduce=`
+correctness vs eager results, submit-side backpressure (the frontier
+tracks pool capacity), the future-GC contract (frontier-bounded live
+futures), federated windowed runs with stealing, and the satellite fixes
+(callable `duration=` specs, body / `when`-branch exceptions failing the
+output future, the affinity-aware `inputs_partitioner`).
+"""
+import gc
+import weakref
+
+import pytest
+
+from repro.core import (CompletionCounter, DataFuture, Dataset, Engine,
+                        FederatedEngine, ListMapper, SimClock, Workflow,
+                        hash_partitioner, inputs_partitioner, resolved,
+                        skewed_partitioner)
+from repro.core.datastore import DataObject
+
+
+def make_engine(concurrency=4):
+    eng = Engine(SimClock())
+    eng.local_site(concurrency=concurrency)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# CompletionCounter
+# ---------------------------------------------------------------------------
+
+def test_completion_counter_counts_without_retaining():
+    c = CompletionCounter()
+    futs = [DataFuture() for _ in range(5)]
+    for f in futs:
+        c.add(f)
+    drained = []
+    c.close(lambda: drained.append(True))
+    assert c.pending == 5 and not drained
+    for f in futs[:4]:
+        f.set(1)
+    assert c.done == 4 and not drained
+    futs[4].set_error(RuntimeError("boom"))
+    assert drained and c.failed == 1
+    assert isinstance(c.first_error, RuntimeError)
+    # the counter holds no references: futures die with the caller's list
+    refs = [weakref.ref(f) for f in futs]
+    del futs, f
+    gc.collect()
+    assert all(r() is None for r in refs)
+
+
+def test_completion_counter_close_after_done_fires_immediately():
+    c = CompletionCounter()
+    f = resolved(7)
+    c.add(f)
+    fired = []
+    c.close(lambda: fired.append(True))
+    assert fired == [True]
+
+
+def test_completion_counter_on_each_sees_each_future():
+    seen = []
+    c = CompletionCounter(on_each=lambda f: seen.append(f._value))
+    for v in range(3):
+        c.add(resolved(v))
+    assert seen == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# windowed foreach: semantics
+# ---------------------------------------------------------------------------
+
+def test_windowed_results_match_eager_in_member_order():
+    """keep_results=True under a window fills slots by member index, so the
+    result list matches eager even when completions arrive out of order
+    (durations descend: later members finish first)."""
+
+    def run(window):
+        eng = make_engine(concurrency=8)
+        wf = Workflow("t", eng)
+        out = wf.foreach(
+            range(12),
+            lambda m: eng.submit("job", None, duration=float(12 - m)),
+            window=window)
+        wf.run()
+        return out.get()
+
+    eager = run(None)
+    windowed = run(3)
+    assert windowed == eager
+    assert windowed == [None] * 12   # sim tasks resolve to their sim_value
+
+
+def test_windowed_reduce_matches_eager_reduce():
+    def run(window):
+        eng = make_engine(concurrency=4)
+        wf = Workflow("t", eng)
+        p = wf.atomic(lambda m: m * m, name="sq")
+        out = wf.foreach(range(20), lambda m: p(m), window=window,
+                         reduce=lambda a, b: a + b, init=0)
+        wf.run()
+        return out.get()
+
+    assert run(None) == run(4) == sum(m * m for m in range(20))
+
+
+def test_windowed_count_only():
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    out = wf.foreach(range(17), lambda m: eng.submit("j", None, duration=1.0),
+                     window=5, keep_results=False)
+    wf.run()
+    assert out.get() == 17
+
+
+def test_window_bounds_frontier_and_refills_in_member_order():
+    """At most `window` bodies in flight; refills follow member order."""
+    eng = make_engine(concurrency=2)
+    wf = Workflow("t", eng)
+    submitted = []
+    in_flight = [0]
+    peak = [0]
+
+    def body(m):
+        submitted.append(m)
+        in_flight[0] += 1
+        peak[0] = max(peak[0], in_flight[0])
+        f = eng.submit("job", None, duration=1.0)
+        f.on_done(lambda _f: in_flight.__setitem__(0, in_flight[0] - 1))
+        return f
+
+    out = wf.foreach(range(30), body, window=3, keep_results=False)
+    wf.run()
+    assert out.get() == 30
+    assert submitted == list(range(30))
+    assert peak[0] <= 3
+
+
+def test_windowed_expansion_is_deterministic_under_simclock():
+    def run():
+        eng = make_engine(concurrency=3)
+        wf = Workflow("t", eng)
+        order = []
+
+        def body(m):
+            order.append(m)
+            return eng.submit("job", None, duration=float((m * 7) % 5 + 1))
+
+        out = wf.foreach(range(40), body, window=4, keep_results=False)
+        wf.run()
+        return order, eng.clock.now(), out.get()
+
+    assert run() == run()
+
+
+def test_windowed_over_generator_is_lazy():
+    """A generator collection is consumed as the window refills, never
+    materialized: at most window + 1 items drawn before completions."""
+    eng = make_engine(concurrency=1)
+    wf = Workflow("t", eng)
+    drawn = []
+    completed = []
+
+    def gen():
+        for m in range(10):
+            drawn.append(m)
+            yield m
+
+    def body(m):
+        f = eng.submit("job", None, duration=1.0)
+        f.on_done(lambda _f: completed.append(m))
+        # the iterator never runs ahead of completions by more than the
+        # window (2) plus the item being submitted
+        assert len(drawn) <= len(completed) + 3
+        return f
+
+    out = wf.foreach(gen(), body, window=2, keep_results=False)
+    wf.run()
+    assert out.get() == 10 and drawn == list(range(10))
+
+
+def test_windowed_over_dataset():
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    ds = Dataset(ListMapper([3, 1, 4, 1, 5]), "vals")
+    p = wf.atomic(lambda v: v * 10, name="scale")
+    out = wf.foreach(ds, lambda v: p(v), window=2)
+    wf.run()
+    assert out.get() == [30, 10, 40, 10, 50]
+
+
+def test_windowed_over_future_collection():
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    coll = eng.submit("make", lambda: list(range(6)), [])
+    p = wf.atomic(lambda v: v + 1, name="inc")
+    out = wf.foreach(coll, lambda v: p(v), window=2,
+                     reduce=lambda a, b: a + b, init=0)
+    wf.run()
+    assert out.get() == sum(v + 1 for v in range(6))
+
+
+def test_windowed_non_future_body_results():
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    out = wf.foreach(range(5), lambda m: m * 2, window=2)
+    wf.run()
+    assert out.get() == [0, 2, 4, 6, 8]
+
+
+def test_windowed_empty_collection():
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    a = wf.foreach([], lambda m: m, window=2)
+    b = wf.foreach([], lambda m: m, window=2, reduce=lambda x, y: x + y,
+                   init=42)
+    c = wf.foreach([], lambda m: m, window=2, keep_results=False)
+    wf.run()
+    assert a.get() == [] and b.get() == 42 and c.get() == 0
+
+
+def test_window_argument_validation():
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    with pytest.raises(ValueError):
+        wf.foreach([1], lambda m: m, window=0)
+    with pytest.raises(ValueError):
+        wf.foreach([1], lambda m: m, reduce=lambda a, b: a,
+                   keep_results=True)
+
+
+# ---------------------------------------------------------------------------
+# failure paths
+# ---------------------------------------------------------------------------
+
+def test_failure_mid_window_fails_output_and_stops_refilling():
+    eng = make_engine(concurrency=1)
+    wf = Workflow("t", eng)
+    submitted = []
+
+    def body(m):
+        submitted.append(m)
+        if m == 4:
+            return eng.submit("bad", lambda: 1 / 0, [])
+        return eng.submit("job", None, duration=1.0)
+
+    out = wf.foreach(range(100), body, window=2, keep_results=False)
+    wf.run()
+    assert out.failed
+    with pytest.raises(ZeroDivisionError):
+        out.get()
+    # refilling stopped shortly after the failure: nowhere near 100
+    assert len(submitted) <= 10
+
+
+def test_body_exception_fails_output_eager_and_windowed():
+    for window in (None, 2):
+        eng = make_engine()
+        wf = Workflow("t", eng)
+
+        def body(m):
+            if m == 1:
+                raise RuntimeError("body blew up")
+            return eng.submit("job", None, duration=1.0)
+
+        out = wf.foreach(range(4), body, window=window)
+        wf.run()
+        assert out.failed
+        with pytest.raises(RuntimeError, match="body blew up"):
+            out.get()
+
+
+def test_when_branch_exception_fails_output():
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    cond = eng.submit("cond", lambda: True, [])
+    out = wf.when(cond, lambda: (_ for _ in ()).throw(RuntimeError("branch")))
+    wf.run()
+    assert out.failed
+    with pytest.raises(RuntimeError, match="branch"):
+        out.get()
+
+
+def test_reducer_exception_fails_output_all_paths():
+    """A raising reducer fails the output future in every mode — windowed
+    and eager foreach, and streaming gather — instead of escaping the
+    clock callback and stranding the future pending."""
+    for window in (2, None):
+        eng = make_engine()
+        wf = Workflow("t", eng)
+        out = wf.foreach(range(5),
+                         lambda m: eng.submit("j", None, duration=1.0),
+                         window=window, reduce=lambda a, b: 1 / 0, init=0)
+        wf.run()
+        assert out.failed
+        with pytest.raises(ZeroDivisionError):
+            out.get()
+
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    futs = [eng.submit("j", None, duration=1.0) for _ in range(3)]
+    out = wf.gather(futs, reduce=lambda a, b: 1 / 0, init=0)
+    wf.run()
+    assert out.failed
+    with pytest.raises(ZeroDivisionError):
+        out.get()
+
+
+# ---------------------------------------------------------------------------
+# streaming gather
+# ---------------------------------------------------------------------------
+
+def test_gather_reduce_and_count():
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    p = wf.atomic(lambda v: v, name="id")
+    futs = [p(v) for v in range(8)]
+    total = wf.gather(list(futs), reduce=lambda a, b: a + b, init=0)
+    count = wf.gather((f for f in futs), keep_results=False)
+    wf.run()
+    assert total.get() == sum(range(8))
+    assert count.get() == 8
+
+
+def test_gather_reduce_failure_propagates():
+    eng = make_engine()
+    wf = Workflow("t", eng)
+    good = eng.submit("g", None, duration=1.0)
+    bad = eng.submit("b", lambda: 1 / 0, [])
+    out = wf.gather([good, bad], reduce=lambda a, b: a, init=None)
+    wf.run()
+    assert out.failed
+    with pytest.raises(ZeroDivisionError):
+        out.get()
+
+
+# ---------------------------------------------------------------------------
+# backpressure: the frontier tracks pool capacity
+# ---------------------------------------------------------------------------
+
+def test_engine_backpressure_surface():
+    eng = make_engine(concurrency=2)
+    assert eng.pool_capacity() == 2
+    assert eng.inflight() == 0 and not eng.saturated()
+    futs = [eng.submit("j", None, duration=1.0) for _ in range(10)]
+    assert eng.inflight() == 10
+    assert eng.dispatchable() == 10     # all dependency-free, at the site
+    assert eng.saturated()              # 10 >= slack(2) x capacity(2)
+    eng.run()
+    assert eng.inflight() == 0 and not eng.saturated()
+    assert all(f.resolved for f in futs)
+
+
+def test_backpressure_throttles_frontier_below_window():
+    """With a tiny pool, the standing frontier settles near slack x
+    capacity — far below the (huge) window — and the run still completes
+    at full pool utilization."""
+    eng = make_engine(concurrency=2)
+    wf = Workflow("t", eng)
+    peak_inflight = [0]
+
+    def body(m):
+        f = eng.submit("job", None, duration=1.0)
+        peak_inflight[0] = max(peak_inflight[0], eng.inflight())
+        return f
+
+    out = wf.foreach(range(60), body, window=1000, keep_results=False)
+    wf.run()
+    assert out.get() == 60
+    # slack x capacity = 4; the frontier never ran meaningfully past it
+    assert peak_inflight[0] <= 8
+    # full utilization: 60 x 1s jobs on 2 slots take ~30 virtual seconds
+    assert eng.clock.now() == pytest.approx(30.0)
+
+
+def test_backpressure_waiter_resumes_expansion():
+    """Refills parked on saturation resume via the completion-side waiter
+    hook, not only at whole-body completions."""
+    eng = make_engine(concurrency=2)
+    wf = Workflow("t", eng)
+
+    def body(m):
+        # a two-stage pipeline per item: the second stage is blocked work
+        a = eng.submit("a", None, duration=1.0)
+        return eng.submit("b", None, [a], duration=1.0)
+
+    out = wf.foreach(range(30), body, window=500, keep_results=False)
+    wf.run()
+    assert out.get() == 30
+    assert not eng._bp_waiters          # no waiter leaked past the run
+
+
+# ---------------------------------------------------------------------------
+# future-GC contract: live futures bounded by the frontier
+# ---------------------------------------------------------------------------
+
+def test_windowed_run_keeps_live_futures_frontier_bounded():
+    eng = make_engine(concurrency=2)
+    live = weakref.WeakSet()
+    orig_submit = eng.submit
+
+    def tracking_submit(*args, **kwargs):
+        f = orig_submit(*args, **kwargs)
+        live.add(f)
+        return f
+
+    eng.submit = tracking_submit
+    wf = Workflow("t", eng)
+    peaks = []
+
+    def body(m):
+        f = eng.submit("job", None, duration=1.0)
+        if m % 50 == 25:
+            gc.collect()
+            peaks.append(len(live))
+        return f
+
+    out = wf.foreach(range(400), body, window=8, keep_results=False)
+    wf.run()
+    assert out.get() == 400
+    # eager expansion would hold ~400 live futures; the windowed frontier
+    # stays O(window)
+    assert peaks and max(peaks) <= 40
+    gc.collect()
+    assert len(live) <= 2
+
+
+def test_completed_task_records_release_upstream_futures():
+    eng = make_engine(concurrency=2)
+    f1 = eng.submit("a", None, duration=1.0)
+    f2 = eng.submit("b", None, [f1], duration=1.0)
+    f3 = eng.submit("c", None, [f2], duration=1.0)
+    r1, r2 = weakref.ref(f1), weakref.ref(f2)
+    del f1, f2
+    eng.run()
+    assert f3.resolved
+    gc.collect()
+    assert r1() is None and r2() is None
+
+
+# ---------------------------------------------------------------------------
+# federated windowed runs
+# ---------------------------------------------------------------------------
+
+def _fed_sites(fed, per_shard=4):
+    for shard in fed.shards:
+        shard.local_site(concurrency=per_shard)
+
+
+def test_federated_windowed_run_with_stealing():
+    def run():
+        fed = FederatedEngine(4, partitioner=skewed_partitioner(0.7),
+                              steal=True)
+        _fed_sites(fed)
+        wf = Workflow("t", fed)
+        p = wf.atomic(lambda m: m, name="job", duration=2.0)
+        out = wf.foreach(range(300), lambda m: p(m), window=16,
+                         reduce=lambda a, b: a + b, init=0)
+        wf.run()
+        return out.get(), fed.clock.now(), fed.stats()["per_shard_completed"]
+
+    total, span, per_shard = run()
+    assert total == sum(range(300))
+    assert run() == (total, span, per_shard)    # deterministic replay
+    assert all(c > 0 for c in per_shard)        # stealing spread the skew
+
+
+def test_federated_windowed_proxy_maps_stay_bounded():
+    fed = FederatedEngine(4)
+    _fed_sites(fed)
+    wf = Workflow("t", fed)
+    shared = fed.submit("seed", None, duration=1.0)
+
+    def body(m):
+        a = fed.submit("a", None, [shared], duration=1.0)
+        return fed.submit("b", None, [a], duration=1.0)
+
+    high_water = [0]
+    orig_proxy = fed._proxy
+
+    def tracking_proxy(fut, consumer):
+        p = orig_proxy(fut, consumer)
+        high_water[0] = max(high_water[0], len(fed._proxies),
+                            len(fed._owner))
+        return p
+
+    fed._proxy = tracking_proxy
+    out = wf.foreach(range(200), body, window=8, keep_results=False)
+    wf.run()
+    assert out.get() == 200
+    # ownership / proxy maps are pruned at resolution: bounded by the
+    # in-flight frontier during the run, empty after it
+    assert high_water[0] <= 120
+    assert not fed._owner and not fed._proxies
+
+
+def test_backpressure_waiter_fires_on_federation_attached_shard():
+    """A workflow driven over one *shard* of a federation parks waiters on
+    that shard engine — completions must still fire them (and not leave a
+    stale callback behind)."""
+    fed = FederatedEngine(2)
+    _fed_sites(fed, per_shard=2)
+    shard = fed.shards[0]
+    wf = Workflow("t", shard)
+    out = wf.foreach(range(40),
+                     lambda m: shard.submit("j", None, duration=1.0),
+                     window=500, keep_results=False)
+    wf.run()
+    assert out.get() == 40
+    assert not shard._bp_waiters
+
+
+def test_federated_backpressure_aggregates_shards():
+    fed = FederatedEngine(2)
+    _fed_sites(fed, per_shard=2)
+    assert fed.pool_capacity() == 4
+    assert not fed.saturated()
+    futs = [fed.submit("j", None, duration=1.0) for _ in range(20)]
+    assert fed.inflight() == 20
+    assert fed.saturated()
+    fed.run()
+    assert fed.inflight() == 0 and not fed.saturated()
+    assert all(f.resolved for f in futs)
+
+
+# ---------------------------------------------------------------------------
+# satellite: callable duration specs
+# ---------------------------------------------------------------------------
+
+def test_callable_duration_resolved_at_submit():
+    eng = make_engine(concurrency=2)
+    wf = Workflow("t", eng)
+    p = wf.atomic(lambda m: m, name="job", duration=lambda m: float(m))
+    p(5)
+    p(3)
+    wf.run()
+    # durations 5 and 3 on two slots: makespan is max, not 0 (the seed
+    # silently discarded callable specs)
+    assert eng.clock.now() == pytest.approx(5.0)
+
+
+def test_callable_duration_in_windowed_foreach():
+    eng = make_engine(concurrency=1)
+    wf = Workflow("t", eng)
+    p = wf.atomic(lambda m: m, name="job", duration=lambda m: 1.0 + m % 2)
+    out = wf.foreach(range(4), lambda m: p(m), window=2,
+                     keep_results=False)
+    wf.run()
+    assert out.get() == 4
+    assert eng.clock.now() == pytest.approx(1.0 + 2.0 + 1.0 + 2.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: affinity-aware federation partitioner
+# ---------------------------------------------------------------------------
+
+def test_inputs_partitioner_colocates_co_input_tasks():
+    a = DataObject("archive_a.tar", 100e6)
+    b = DataObject("archive_b.tar", 100e6)
+    small = DataObject("params.cfg", 1e3)
+    # same anchor input -> same shard, regardless of task key
+    sa = {inputs_partitioner(f"t#{i}", 4, (a,)) for i in range(50)}
+    sb = {inputs_partitioner(f"t#{i}", 4, (a, small)) for i in range(50)}
+    assert len(sa) == 1 and sa == sb    # anchored on the largest input
+    assert inputs_partitioner("x", 4, (b,)) == \
+        inputs_partitioner("y", 4, (b, small))
+    # no inputs: falls back to the key hash, identical to hash_partitioner
+    for key in ("t#0", "t#1", "prep#9"):
+        assert inputs_partitioner(key, 4) == hash_partitioner(key, 4)
+
+
+def test_federated_engine_routes_by_declared_inputs():
+    fed = FederatedEngine(4, partitioner=inputs_partitioner)
+    _fed_sites(fed)
+    wf = Workflow("t", fed)
+    archives = [DataObject(f"mol{m}.arc", 50e6) for m in range(8)]
+    p = wf.atomic(lambda m: m, name="analyze", duration=1.0,
+                  inputs=lambda m: (archives[m % 8],))
+    out = wf.foreach(range(64), lambda m: p(m), window=16,
+                     keep_results=False)
+    wf.run()
+    assert out.get() == 64
+    # every task sharing an archive landed on one shard: at most 8 distinct
+    # (archive -> shard) routes were used, and re-running a molecule's
+    # tasks cannot scatter.  With 8 archives over 4 shards each shard saw
+    # only its archives' tasks, so totals are multiples of 8.
+    per_shard = [e.tasks_submitted for e in fed.shards]
+    assert sum(per_shard) == 64
+    assert all(c % 8 == 0 for c in per_shard)
