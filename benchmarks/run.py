@@ -36,6 +36,7 @@ MODULES = [
     "benchmarks.data_diffusion",       # §6: cache-aware data layer
     "benchmarks.federation",           # §8: multi-engine federation
     "benchmarks.streaming_expansion",  # §9: windowed graph construction
+    "benchmarks.real_throughput",      # §10: real threads, Fig-6 shape
 ]
 
 

@@ -1,8 +1,9 @@
-"""Quickstart: the three layers of the framework in one script.
+"""Quickstart: the layers of the framework in one script.
 
 1. SwiftScript-style workflow: typed datasets, dynamic foreach, futures.
-2. Falkon execution: provisioning separated from ms-scale dispatch.
+2. Real execution: the same program on actual worker threads (RealClock).
 3. JAX model zoo: one forward/train step of an assigned architecture.
+4. Pallas kernel vs its oracle.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (DRPConfig, Engine, FalkonConfig, FalkonProvider,
-                        FalkonService, SimClock, Workflow)
+                        FalkonService, RealClock, SimClock,
+                        ThreadExecutorPool, Workflow)
 
 
 def demo_workflow():
@@ -38,8 +40,35 @@ def demo_workflow():
           f"makespan {clock.now():.2f}s virtual)")
 
 
+def demo_real_execution():
+    print("== 2. Real execution: same program, actual worker threads ==")
+    clock = RealClock()
+    pool = ThreadExecutorPool(clock)      # DRP acquires real threads
+    svc = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=8, alloc_latency=0.0, alloc_chunk=8)),
+        pool=pool)
+    engine = Engine(clock)
+    engine.add_site("pod0", FalkonProvider(svc), capacity=8)
+    wf = Workflow("real", engine)
+
+    @wf.atomic
+    def square(x):
+        return x * x
+
+    @wf.atomic
+    def total(xs):
+        return sum(xs)
+
+    result = total(wf.foreach(list(range(10)), lambda x: square(x)))
+    wf.run()
+    svc.shutdown()
+    print(f"   sum of squares = {result.get()}  "
+          f"({pool.tasks_run} bodies on {len(svc.executors)} real workers, "
+          f"{clock.now() * 1e3:.1f} ms wall)")
+
+
 def demo_model():
-    print("== 2. Model zoo: one train step of qwen2-1.5b (reduced) ==")
+    print("== 3. Model zoo: one train step of qwen2-1.5b (reduced) ==")
     from repro.configs import registry
     from repro.models import transformer as T
     from repro.models.params import init_tree
@@ -58,7 +87,7 @@ def demo_model():
 
 
 def demo_kernel():
-    print("== 3. Pallas flash-attention kernel (interpret mode on CPU) ==")
+    print("== 4. Pallas flash-attention kernel (interpret mode on CPU) ==")
     from repro.kernels import ops, ref
     q = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 128, 64))
     k = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 128, 64))
@@ -72,6 +101,7 @@ def demo_kernel():
 
 if __name__ == "__main__":
     demo_workflow()
+    demo_real_execution()
     demo_model()
     demo_kernel()
     print("quickstart OK")

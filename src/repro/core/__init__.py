@@ -17,6 +17,7 @@ from repro.core.datastore import (DataLayer, DataObject, EvictionPolicy,
 from repro.core.engine import Engine
 from repro.core.falkon import DRPConfig, FalkonConfig, FalkonService
 from repro.core.federation import (FederatedEngine, Mailbox,
+                                   MailboxTransport, QueueTransport,
                                    ShardedDataLayer, WorkStealer,
                                    hash_partitioner, inputs_partitioner,
                                    skewed_partitioner)
@@ -28,6 +29,7 @@ from repro.core.provenance import VDC, InvocationRecord
 from repro.core.providers import (BatchSchedulerProvider, ClusteringProvider,
                                   FalkonProvider, LocalProvider, Provider,
                                   WorkerPoolProvider)
+from repro.core.realpool import ProcessExecutorPool, ThreadExecutorPool
 from repro.core.restart_log import RestartLog
 from repro.core.simclock import RealClock, SimClock
 from repro.core.sites import LoadBalancer, Site
@@ -43,6 +45,7 @@ __all__ = [
     "Provider", "WorkerPoolProvider",
     "LocalProvider", "BatchSchedulerProvider", "FalkonProvider",
     "ClusteringProvider", "FalkonService", "FalkonConfig", "DRPConfig",
+    "ThreadExecutorPool", "ProcessExecutorPool",
     "DataFuture", "CompletionCounter", "resolved", "when_all",
     "SimClock", "RealClock",
     "RestartLog", "FaultInjector", "RetryPolicy", "TaskFailure",
@@ -50,7 +53,8 @@ __all__ = [
     "DataLayer", "DataObject", "SharedStore", "ExecutorCache",
     "StagingCostModel", "EvictionPolicy", "LRUPolicy", "LFUPolicy",
     "SizeAwarePolicy", "ShardDirectory",
-    "FederatedEngine", "Mailbox", "WorkStealer", "ShardedDataLayer",
+    "FederatedEngine", "Mailbox", "MailboxTransport", "QueueTransport",
+    "WorkStealer", "ShardedDataLayer",
     "hash_partitioner", "skewed_partitioner", "inputs_partitioner",
     "Dataset", "Mapper", "ListMapper", "FileSystemMapper", "CSVMapper",
     "ShardMapper", "PhysicalRef", "Struct", "ArrayOf", "Primitive",

@@ -101,6 +101,10 @@ class SharedStore:
     def __init__(self, name: str = "gpfs"):
         self.name = name
         self.objects: dict[str, DataObject] = {}
+        # real payload bytes (DESIGN.md §10): populated by `put`, read by
+        # measured staging; objects declared by size only synthesize a
+        # zero-filled payload at read time
+        self.payloads: dict[str, bytes] = {}
         self.readers = 0
         self.reads = 0
         self.bytes_read = 0.0
@@ -108,6 +112,24 @@ class SharedStore:
     def add(self, obj: DataObject) -> DataObject:
         self.objects[obj.name] = obj
         return obj
+
+    def put(self, name: str, data: bytes) -> DataObject:
+        """Store a real payload (DESIGN.md §10): declares `name` with the
+        payload's size and keeps the bytes, so measured staging copies the
+        actual content into executor caches instead of synthesizing
+        zeros.  Example::
+
+            store = SharedStore()
+            archive = store.put("params.tar", b"x" * 4096)
+        """
+        obj = self.file(name, len(data))
+        self.payloads[name] = bytes(data)
+        return obj
+
+    def payload(self, obj: DataObject) -> bytes | None:
+        """The stored payload for `obj`, or None when it was declared by
+        size only (measured staging then synthesizes zeros of that size)."""
+        return self.payloads.get(obj.name)
 
     def file(self, name: str, size: float) -> DataObject:
         """Declare (or look up) a file in this store.  Re-declaring a name
@@ -309,6 +331,10 @@ class ExecutorCache:
         self.capacity = float(capacity)
         self.policy = make_policy(policy)
         self.objects: dict[str, DataObject] = {}
+        # real cached bytes (DESIGN.md §10): filled by measured staging on
+        # the real execution path, keyed like `objects`; empty on the
+        # simulated path.  Bounded by `capacity` because admission is.
+        self.data: dict[str, bytes] = {}
         self.used = 0.0
         self.evictions = 0
         self._pins: dict[str, int] = {}
@@ -377,6 +403,7 @@ class ExecutorCache:
 
     def _evict(self, name: str) -> DataObject:
         obj = self.objects.pop(name)
+        self.data.pop(name, None)
         self.used -= obj.size
         self.evictions += 1
         self.policy.on_evict(obj)
@@ -476,6 +503,8 @@ class DataLayer:
         self.bytes_staged = 0.0
         self.staged_stat = StreamStat(cap=512)   # staged bytes per dispatch
         self.hit_stat = StreamStat(cap=512)      # hit fraction per dispatch
+        # real path only (DESIGN.md §10): measured staging seconds per task
+        self.measured_io_stat = StreamStat(cap=512)
 
     # -- executor lifecycle --------------------------------------------------
     def register_executor(self, e: "Executor") -> None:
@@ -629,6 +658,71 @@ class DataLayer:
             self.hit_stat.observe(now, hits / n)
         return io
 
+    # -- measured staging (real execution path, DESIGN.md §10) ---------------
+    def plan_staging(self, e: "Executor", task) -> "_StagePlan":
+        """Clock-thread half of *measured* staging: identical cache, holder
+        index, pin, and byte accounting to `stage_inputs`, but instead of
+        pricing the reads it returns a `_StagePlan` — a callable the worker
+        pool runs inside the task's service time to perform the real byte
+        copies (shared-store payload -> executor cache for misses, cache ->
+        local read for hits).  `end_staging` closes the books when the
+        measured completion comes back.
+
+        The worker touches only the plan's copy list and `cache.data` (its
+        own pinned keys — never evicted mid-run, so no clock-thread
+        conflict); all index/metric state stays on the clock thread.
+        """
+        cache = e.cache
+        copies: list = []
+        hits = misses = 0
+        staged = 0.0
+        open_reads = 0
+        for obj in task.inputs:
+            if cache is not None and obj.name in cache.objects:
+                cache.touch(obj.name)
+                hits += 1
+                self.bytes_local += obj.size
+                copies.append((obj, cache, False))
+            else:
+                misses += 1
+                staged += obj.size
+                self.shared._begin_read(obj.size)
+                open_reads += 1
+                admitted = False
+                if cache is not None:
+                    admitted, evicted = cache.admit(obj)
+                    if admitted:
+                        holders = self._holders.get(obj.name)
+                        if holders is None:
+                            self._holders[obj.name] = holders = {}
+                            if self.directory is not None:
+                                self.directory.add(obj.name, self.shard_id)
+                        holders[e.id] = e
+                    for ev in evicted:
+                        self._drop_holder(ev.name, e)
+                copies.append((obj, cache if admitted else None, True))
+            if cache is not None:
+                cache.pin(obj.name)
+        self.hits += hits
+        self.misses += misses
+        self.bytes_staged += staged
+        return _StagePlan(self.shared, copies, open_reads, hits, misses,
+                          staged)
+
+    def end_staging(self, plan: "_StagePlan", io_s: float,
+                    now: float) -> None:
+        """Close a `plan_staging` plan on the clock thread: release the
+        shared-store reader slots the plan's misses held for the duration
+        of the real copies, and record the plan's byte/hit stats plus the
+        *measured* staging seconds."""
+        for _ in range(plan.open_reads):
+            self.shared._end_read()
+        self.staged_stat.observe(now, plan.staged)
+        n = plan.hits + plan.misses
+        if n:
+            self.hit_stat.observe(now, plan.hits / n)
+        self.measured_io_stat.observe(now, io_s)
+
     def release_inputs(self, e: "Executor", task) -> None:
         cache = e.cache
         if cache is None:
@@ -663,7 +757,50 @@ class DataLayer:
             "shared_reads": self.shared.reads,
             "shared_bytes": self.shared.bytes_read,
             "indexed_objects": len(self._holders),
+            "measured_io_s": self.measured_io_stat.summary(),
         }
+
+
+class _StagePlan:
+    """One task's worth of real staging copies (DESIGN.md §10).
+
+    Built by `DataLayer.plan_staging` on the clock thread; called by a
+    worker inside the task's measured service time.  A miss materializes
+    the shared store's payload (stored bytes, or synthesized zeros for
+    size-only objects) and retains it in `cache.data` when the object was
+    admitted; a hit copies out of the executor's cache (the local read).
+    """
+
+    __slots__ = ("shared", "copies", "open_reads", "hits", "misses",
+                 "staged")
+
+    def __init__(self, shared: SharedStore, copies: list, open_reads: int,
+                 hits: int, misses: int, staged: float):
+        self.shared = shared
+        self.copies = copies
+        self.open_reads = open_reads
+        self.hits = hits
+        self.misses = misses
+        self.staged = staged
+
+    def __call__(self) -> None:
+        for obj, cache, is_miss in self.copies:
+            if is_miss:
+                src = self.shared.payload(obj)
+                # the shared-store read: copy the payload (or synthesize a
+                # zero-filled buffer of the declared size — an equivalent
+                # allocation+fill)
+                data = bytes(bytearray(src)) if src is not None \
+                    else bytes(int(obj.size))
+                if cache is not None:       # admitted on the clock thread
+                    cache.data[obj.name] = data
+            else:
+                src = cache.data.get(obj.name)
+                if src is None:
+                    # cache-resident from a sim run or seeded by size only:
+                    # materialize once so later local reads copy real bytes
+                    src = cache.data[obj.name] = bytes(int(obj.size))
+                bytearray(src)              # the local read: one real copy
 
 
 def inputs_of(spec, *args) -> tuple:

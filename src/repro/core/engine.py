@@ -111,6 +111,28 @@ class ReadyQueue:
 
 
 class Engine:
+    """The Karajan-style dataflow engine: submit tasks, get futures, run.
+
+    Tasks become *ready* when their argument futures resolve and are placed
+    on a site by the score-based `LoadBalancer`; `run()` drives the clock
+    until the graph drains.  Most programs use the `Workflow` DSL on top,
+    but `submit` is the primitive everything lowers to.
+
+    Example::
+
+        clock = SimClock()                 # or RealClock() for wall time
+        eng = Engine(clock)
+        eng.local_site(concurrency=4)
+        a = eng.submit("double", lambda x: 2 * x, args=[21])
+        b = eng.submit("inc", lambda x: x + 1, args=[a])   # depends on a
+        eng.run()
+        assert b.get() == 43
+
+    Constructor knobs: ``provenance="summary"`` keeps only aggregate VDC
+    counters (required at 10^6 tasks), `restart_log`/`fault_injector`
+    enable §3.12 behaviors, `retry_policy` bounds retries.
+    """
+
     def __init__(self, clock: Clock | None = None,
                  retry_policy: RetryPolicy | None = None,
                  vdc: VDC | None = None,
@@ -177,6 +199,17 @@ class Engine:
                duration: float | None = None, app: str | None = None,
                durable: bool = False, key: str | None = None,
                vmap_key=None, inputs=None) -> DataFuture:
+        """Submit one task; returns its output `DataFuture` immediately.
+
+        `fn` is the task body (None for pure-simulation tasks); `args` may
+        mix literals and futures — the task dispatches when every argument
+        future resolves.  `duration` is the simulated service time (ignored
+        on the real execution path, where runtime is measured).  `app`
+        routes via site app-validity; `durable` + a `RestartLog` persists
+        the result; `inputs` declares the task's file inputs for the data
+        layer — a `DataObject`, an iterable of them, or a callable mapping
+        the call args to either (see `DataLayer`, DESIGN.md §7).
+        """
         args = args or []
         out = DataFuture(name=name)
         if key is None:

@@ -81,11 +81,31 @@ class Executor:
 
 
 class FalkonService:
-    """Web-services interface -> in-process API (see DESIGN.md §2)."""
+    """The Falkon execution service: multi-level scheduling (paper §4).
+
+    Provisioning (DRP) is decoupled from dispatch; executors register with
+    the service and queued tasks are dispatched to idle executors in O(1).
+    Wrap in a `FalkonProvider` to register it as an engine site.
+
+    Example — simulated pool (deterministic, virtual time)::
+
+        clock = SimClock()
+        svc = FalkonService(clock, FalkonConfig(
+            drp=DRPConfig(max_executors=64, alloc_latency=5.0)))
+        eng = Engine(clock)
+        eng.add_site("pod0", FalkonProvider(svc), capacity=64)
+
+    Real execution (DESIGN.md §10): pass ``pool=ThreadExecutorPool(clock)``
+    (or a `ProcessExecutorPool`) and a `RealClock` — the same program then
+    runs task bodies on actual workers, DRP provisioning acquires/releases
+    real threads (the pool autoscales with the executor count), and staging
+    through an attached data layer performs measured byte copies instead of
+    priced ones.
+    """
 
     def __init__(self, clock: Clock, config: FalkonConfig | None = None,
                  name: str = "falkon", trace: bool = False,
-                 data_layer=None):
+                 data_layer=None, pool=None):
         self.clock = clock
         self.cfg = config or FalkonConfig()
         self.name = name
@@ -95,6 +115,10 @@ class FalkonService:
         # input reads are priced by the staging cost model.  None keeps the
         # locality-blind O(1) dispatch path byte-for-byte.
         self.data_layer = data_layer
+        # real execution (DESIGN.md §10): when a worker pool is attached,
+        # task bodies run on its workers and completions re-enter through
+        # the clock's post queue; None keeps the simulated path byte-for-byte
+        self.pool = pool
         self.queue: deque = deque()
         self.executors: list[Executor] = []
         self._idle: deque = deque()   # O(1) dispatch: idle-executor pool
@@ -140,6 +164,10 @@ class FalkonService:
                     self.data_layer.register_executor(e)
                 self.executors.append(e)
                 self._push_idle(e)
+            if self.pool is not None and self.pool.autoscale:
+                # real execution: provisioning acquires actual workers —
+                # one pool worker per registered executor
+                self.pool.resize(len(self.executors))
             self._pump()
 
         self.clock.schedule(self.cfg.drp.alloc_latency, arrive)
@@ -185,6 +213,9 @@ class FalkonService:
                         self.data_layer.deregister_executor(e)
             self.executors = [e for e in self.executors if e.id not in drop]
             self._idle = deque(e for e in self._idle if e.id not in drop)
+            if self.pool is not None and self.pool.autoscale:
+                # idle de-registration releases the backing workers too
+                self.pool.resize(len(self.executors))
 
     # ------------------------------------------------------------------
     # dispatch
@@ -294,6 +325,9 @@ class FalkonService:
             wait = gate - now if gate > now else 0.0
             self._dispatcher_free_at = now + wait + overhead
             overhead = wait + overhead
+        if self.pool is not None:
+            self._dispatch_real(e, task, overhead)
+            return
         dl = self.data_layer
         # input staging: cached inputs are read locally, the rest staged
         # from the shared store (and cached for the next task); the I/O time
@@ -306,51 +340,96 @@ class FalkonService:
 
         def finish():
             ok, value, err = execute_task(task)
-            end = self.clock.now()
-            if self.trace:
-                e.task_log.append((start, end))
-            if dl is not None and task.inputs:
-                dl.release_inputs(e, task)
-            self.tasks_finished += 1
-            e.busy = False
-            e.idle_since = end
-            e.busy_time += max(0.0, end - start)
-            if ok:
-                e.consec_failures = 0
-                e.tasks_done += 1
-            else:
-                e.consec_failures += 1
-                if e.consec_failures >= self.cfg.host_fail_threshold:
-                    # paper §3.12: suspend faulty host, reschedule elsewhere
-                    e.suspended_until = end + self.cfg.host_suspend_time
-                    e.consec_failures = 0
-            next_local = None
-            if e.local_q and end < e.suspended_until:
-                # suspended host: hand its affinity queue back to the
-                # service so other holders (or cold spillover) take it
-                self._parked -= len(e.local_q)
-                self.queue.extendleft(reversed(e.local_q))
-                e.local_q.clear()
-                e.local_work = 0.0
-            elif e.local_q:
-                next_local = e.local_q.popleft()
-                e.local_work -= sim_duration(next_local)
-                self._parked -= 1
-            if next_local is None:
-                self._push_idle(e)
-            # break the task -> callback -> task reference cycle so
-            # completed tasks are freed by refcounting, not the cycle GC
-            callback = task._falkon_done
-            task._falkon_done = None
-            if next_local is not None:
-                # affinity queue drains first: the executor keeps running
-                # tasks whose inputs it already holds (data diffusion)
-                self._dispatch(e, next_local)
-            callback(ok, value, err)
-            self._maybe_shrink()
-            self._pump()
+            self._complete(e, task, ok, value, err, start)
 
         self.clock.schedule(overhead + io + sim_duration(task), finish)
+
+    def _dispatch_real(self, e: Executor, task, overhead: float):
+        """Real execution (DESIGN.md §10): the task body — and, with a data
+        layer attached, its real staging copies — runs on a pool worker; the
+        measured completion re-enters on the clock thread.  The modeled
+        `dispatch_overhead` applies only under ``serialize_dispatch`` (where
+        it *is* the model being studied — the dispatcher ceiling); otherwise
+        dispatch cost is whatever the dispatcher actually takes."""
+        dl = self.data_layer
+        stage = None
+        if dl is not None and task.inputs:
+            # cache/holder bookkeeping happens here on the clock thread;
+            # only the byte copies run on the worker (inside the measured
+            # service time, where the simulated path adds priced I/O)
+            stage = dl.plan_staging(e, task)
+
+        def finish_real(ok, value, err, io_s, run_s):
+            if stage is not None:
+                dl.end_staging(stage, io_s, self.clock.now())
+            self._complete(e, task, ok, value, err, task.start_time,
+                           busy_s=io_s + run_s)
+
+        def handoff():
+            task.start_time = self.clock.now()
+            task.host = e.host
+            self.pool.submit(task, finish_real, stage)
+
+        if self.cfg.serialize_dispatch and overhead > 0.0:
+            self.clock.schedule(overhead, handoff)
+        else:
+            handoff()
+
+    def _complete(self, e: Executor, task, ok: bool, value, err,
+                  start: float, busy_s: float | None = None):
+        """Shared post-execution bookkeeping for both paths.  `busy_s` is
+        the measured service time on the real path; the simulated path
+        derives it from the scheduled start/end."""
+        end = self.clock.now()
+        if self.trace:
+            e.task_log.append((start, end))
+        dl = self.data_layer
+        if dl is not None and task.inputs:
+            dl.release_inputs(e, task)
+        self.tasks_finished += 1
+        e.busy = False
+        e.idle_since = end
+        e.busy_time += busy_s if busy_s is not None else max(0.0, end - start)
+        if ok:
+            e.consec_failures = 0
+            e.tasks_done += 1
+        else:
+            e.consec_failures += 1
+            if e.consec_failures >= self.cfg.host_fail_threshold:
+                # paper §3.12: suspend faulty host, reschedule elsewhere
+                e.suspended_until = end + self.cfg.host_suspend_time
+                e.consec_failures = 0
+        next_local = None
+        if e.local_q and end < e.suspended_until:
+            # suspended host: hand its affinity queue back to the
+            # service so other holders (or cold spillover) take it
+            self._parked -= len(e.local_q)
+            self.queue.extendleft(reversed(e.local_q))
+            e.local_q.clear()
+            e.local_work = 0.0
+        elif e.local_q:
+            next_local = e.local_q.popleft()
+            e.local_work -= sim_duration(next_local)
+            self._parked -= 1
+        if next_local is None:
+            self._push_idle(e)
+        # break the task -> callback -> task reference cycle so
+        # completed tasks are freed by refcounting, not the cycle GC
+        callback = task._falkon_done
+        task._falkon_done = None
+        if next_local is not None:
+            # affinity queue drains first: the executor keeps running
+            # tasks whose inputs it already holds (data diffusion)
+            self._dispatch(e, next_local)
+        callback(ok, value, err)
+        self._maybe_shrink()
+        self._pump()
+
+    def shutdown(self) -> None:
+        """Stop the attached worker pool, if any (no-op on the simulated
+        path).  Call after `run()` returns; queued work has completed."""
+        if self.pool is not None:
+            self.pool.shutdown()
 
     # ------------------------------------------------------------------
     def utilization(self) -> dict:

@@ -14,6 +14,13 @@ from typing import Callable
 
 
 class TaskFailure(Exception):
+    """A task-body failure carrying its fault class (paper §3.12):
+    ``kind`` is ``"transient"`` (retried in place), ``"host"`` (counts
+    toward executor suspension), or ``"site"`` (rescheduled at a different
+    site).  Raise it from a task body — or let any other exception map to
+    transient — e.g. ``raise TaskFailure("stale NFS handle", kind="host")``.
+    """
+
     def __init__(self, msg: str, kind: str = "transient"):
         super().__init__(msg)
         self.kind = kind  # transient | host | site

@@ -54,7 +54,8 @@ from repro.core.metrics import StreamStat
 from repro.core.simclock import Clock, SimClock
 
 __all__ = [
-    "FederatedEngine", "Mailbox", "WorkStealer", "ShardedDataLayer",
+    "FederatedEngine", "Mailbox", "MailboxTransport", "QueueTransport",
+    "WorkStealer", "ShardedDataLayer",
     "hash_partitioner", "skewed_partitioner", "inputs_partitioner",
 ]
 
@@ -106,6 +107,76 @@ def inputs_partitioner(key: str, n_shards: int, inputs: tuple = ()) -> int:
 inputs_partitioner.wants_inputs = True
 
 
+class MailboxTransport:
+    """Delivery mechanism behind a `Mailbox` (DESIGN.md §10).
+
+    The default (no transport) models delivery: a coalesced clock flush
+    after a simulated latency.  A transport replaces the model with a real
+    hand-off — messages cross its medium and are *delivered* on the
+    consumer's clock thread via the `deliver` callback the mailbox binds.
+    """
+
+    def bind(self, clock: Clock, deliver: Callable) -> None:
+        raise NotImplementedError
+
+    def send(self, msg) -> None:
+        raise NotImplementedError
+
+
+class QueueTransport(MailboxTransport):
+    """Queue-backed in-process transport (DESIGN.md §10): messages cross a
+    thread-safe `queue.SimpleQueue` and are drained on the consumer's clock
+    thread through `Clock.post`, one coalesced drain per burst.
+
+    Under `RealClock` this is true cross-thread-capable delivery (the post
+    wakes the event loop even mid-wait); under `SimClock` the same code
+    path runs deterministically (`post` degrades to `schedule(0, ...)`),
+    which is how the delivery/failure tests pin its semantics.  Example::
+
+        fed = FederatedEngine(4, clock=RealClock(), transport="queue")
+    """
+
+    def __init__(self):
+        import queue as _queue
+        import threading as _threading
+        self._q = _queue.SimpleQueue()
+        self._empty = _queue.Empty
+        self._lock = _threading.Lock()
+        self._wake_pending = False
+        self._clock: Clock | None = None
+        self._deliver: Callable | None = None
+        self.sends = 0
+
+    def bind(self, clock: Clock, deliver: Callable) -> None:
+        self._clock = clock
+        self._deliver = deliver
+
+    def send(self, msg) -> None:
+        self.sends += 1
+        self._q.put(msg)
+        # coalesce wakeups: one drain event per burst.  The drain clears
+        # the flag *before* reading the queue, so a sender that observes
+        # the flag still set is guaranteed its message is picked up by the
+        # drain that clears it.
+        with self._lock:
+            if self._wake_pending:
+                return
+            self._wake_pending = True
+        self._clock.post(self._drain)
+
+    def _drain(self) -> None:
+        with self._lock:
+            self._wake_pending = False
+        batch = []
+        while True:
+            try:
+                batch.append(self._q.get_nowait())
+            except self._empty:
+                break
+        if batch:
+            self._deliver(batch)
+
+
 class Mailbox:
     """Cross-shard completion delivery for one consumer shard.
 
@@ -118,12 +189,22 @@ class Mailbox:
     latency (the flush re-schedules for the not-yet-due tail).  Failures
     propagate: a failed source fails its proxies, and the consumer
     engine's upstream-failure path handles the rest.
+
+    With a `MailboxTransport` attached (e.g. `QueueTransport`,
+    DESIGN.md §10) delivery is *real* instead of modeled: `post` hands the
+    message to the transport and the transport's drain delivers it on the
+    consumer's clock thread; `latency` is then whatever the transport
+    actually takes and the parameter is ignored.
     """
 
-    def __init__(self, clock: Clock, shard_id: int, latency: float = 0.0):
+    def __init__(self, clock: Clock, shard_id: int, latency: float = 0.0,
+                 transport: MailboxTransport | None = None):
         self.clock = clock
         self.shard_id = shard_id
         self.latency = latency
+        self.transport = transport
+        if transport is not None:
+            transport.bind(clock, self._deliver)
         self._queue: deque = deque()    # (ready_at, proxy, src), time-sorted
         self._flush_at = None
         self.messages = 0
@@ -131,13 +212,27 @@ class Mailbox:
         self.batch_stat = StreamStat(cap=256)   # messages per flush
 
     def post(self, proxy: DataFuture, src: DataFuture) -> None:
+        self.messages += 1
+        if self.transport is not None:
+            self.transport.send((proxy, src))
+            return
         now = self.clock.now()
         # posts arrive in clock order, so the deque stays sorted by ready_at
         self._queue.append((now + self.latency, proxy, src))
-        self.messages += 1
         if self._flush_at is None:
             self._flush_at = now + self.latency
             self.clock.schedule(self.latency, self._flush)
+
+    def _deliver(self, batch: list) -> None:
+        """Transport drain target: resolve a batch of delivered messages on
+        the consumer's clock thread (same failure propagation as `_flush`)."""
+        for proxy, src in batch:
+            if src.failed:
+                proxy.set_error(src._error)
+            else:
+                proxy.set(src.get())
+        self.flushes += 1
+        self.batch_stat.observe(self.clock.now(), len(batch))
 
     def _flush(self) -> None:
         self._flush_at = None
@@ -366,6 +461,8 @@ class FederatedEngine:
                  data_layer: ShardedDataLayer | None = None,
                  stealer: WorkStealer | None = None, steal: bool = True,
                  delivery_latency: float = 0.0,
+                 transport: str | Callable[[], MailboxTransport]
+                 | None = None,
                  engine_kwargs: dict | None = None):
         if isinstance(shards, int):
             if shards < 1:
@@ -386,8 +483,19 @@ class FederatedEngine:
         self._partition_on_inputs = getattr(self.partitioner,
                                             "wants_inputs", False)
         self.data_layer = data_layer
-        self.mailboxes = [Mailbox(self.clock, i, delivery_latency)
-                          for i in range(len(shards))]
+        # transport=None: latency-simulated delivery (one coalesced flush
+        # per window).  "queue" (or a factory returning MailboxTransport
+        # instances): real queue-backed delivery per consumer shard —
+        # delivery_latency is then ignored (DESIGN.md §10).
+        if transport == "queue":
+            transport = QueueTransport
+        elif isinstance(transport, str):
+            raise ValueError(f"unknown mailbox transport {transport!r}; "
+                             f"expected 'queue', a factory, or None")
+        self.mailboxes = [
+            Mailbox(self.clock, i, delivery_latency,
+                    transport=transport() if transport is not None else None)
+            for i in range(len(shards))]
         self.stealer = stealer if stealer is not None else (
             WorkStealer(self.clock) if steal else None)
         if self.stealer is not None:

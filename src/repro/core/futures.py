@@ -18,6 +18,22 @@ class FutureError(Exception):
 
 
 class DataFuture:
+    """Single-assignment future: set exactly once, consumed via callbacks.
+
+    The engine's dataflow edges are these — a task's output is a
+    `DataFuture`, and downstream tasks list it in their `args` to declare
+    the dependency.  No thread ever blocks: `on_done` registers a callback
+    (fired immediately if already resolved), `get()` reads a resolved
+    value or raises the stored error.
+
+    Example::
+
+        f = DataFuture(name="x")
+        f.on_done(lambda fut: print("got", fut.get()))
+        f.set(42)                      # fires the callback
+        assert f.resolved and f.get() == 42
+    """
+
     # __weakref__ so lifetime contracts (DESIGN.md §9: resolved frontiers
     # are GC-able) can be observed without retaining the future
     __slots__ = ("id", "name", "_value", "_error", "_state", "_callbacks",
@@ -97,6 +113,8 @@ class DataFuture:
 
 
 def resolved(value: Any, name: str = "") -> DataFuture:
+    """A future already resolved to `value` — lifts a literal into the
+    dataflow graph (e.g. ``wf.foreach(resolved([1, 2, 3]), body)``)."""
     f = DataFuture(name)
     f.set(value)
     return f

@@ -30,6 +30,17 @@ if TYPE_CHECKING:
 
 
 class Provider:
+    """Abstract execution provider (paper §3.11): `submit(task, when_done)`
+    with ``when_done(ok, value, error)`` called exactly once per
+    submission.  Implementations wrap a local pool, a simulated batch
+    scheduler, the Falkon service, or another provider (clustering).
+
+    Example — register any provider as an engine site::
+
+        eng.add_site("cluster", BatchSchedulerProvider(clock, nodes=32),
+                     capacity=32)
+    """
+
     name = "provider"
 
     def submit(self, task: Task, when_done: Callable) -> None:
@@ -44,13 +55,24 @@ class WorkerPoolProvider(Provider):
     queue — immediately for the local host, after a gateway throttle plus
     scheduler latency for a batch system).  Draining is O(1) per task: each
     completion frees one slot and pulls the queue head; no scans.
+
+    Simulated by default: a slot occupies the clock for the task's declared
+    `duration` and the body executes at the scheduled completion.  Pass
+    ``pool=`` (a `ThreadExecutorPool` / `ProcessExecutorPool`,
+    DESIGN.md §10) to run bodies on real workers instead — the slot is held
+    for the *measured* run and durations are ignored::
+
+        prov = LocalProvider(clock, 8, pool=ThreadExecutorPool(clock, 8))
     """
 
     name = "pool"
 
-    def __init__(self, clock: Clock, slots: int):
+    def __init__(self, clock: Clock, slots: int, pool=None):
         self.clock = clock
         self.slots = slots
+        self.pool = pool
+        if pool is not None and pool.autoscale:
+            pool.resize(slots)
         self._running = 0
         self._queue: deque = deque()
 
@@ -65,12 +87,18 @@ class WorkerPoolProvider(Provider):
     def _pump(self) -> None:
         queue = self._queue
         clock = self.clock
+        pool = self.pool
         while queue and self._running < self.slots:
             task, when_done = queue.popleft()
             self._running += 1
             task.start_time = clock.now()
-            clock.schedule(sim_duration(task),
-                           partial(self._finish, task, when_done))
+            if pool is not None:
+                # real execution: the body runs on a worker; the measured
+                # completion re-enters on the clock thread
+                pool.submit(task, partial(self._finish_real, task, when_done))
+            else:
+                clock.schedule(sim_duration(task),
+                               partial(self._finish, task, when_done))
 
     def _finish(self, task: Task, when_done: Callable) -> None:
         ok, value, err = execute_task(task)
@@ -78,14 +106,28 @@ class WorkerPoolProvider(Provider):
         when_done(ok, value, err)
         self._pump()
 
+    def _finish_real(self, task: Task, when_done: Callable,
+                     ok: bool, value, err, io_s: float,
+                     run_s: float) -> None:
+        self._running -= 1
+        when_done(ok, value, err)
+        self._pump()
+
 
 class LocalProvider(WorkerPoolProvider):
-    """Immediate local execution (the paper's local-host provider)."""
+    """Immediate local execution (the paper's local-host provider).
+
+    Example::
+
+        eng = Engine(clock)
+        eng.add_site("localhost", LocalProvider(clock, concurrency=4),
+                     capacity=4)
+    """
 
     name = "local"
 
-    def __init__(self, clock: Clock, concurrency: int = 1):
-        super().__init__(clock, concurrency)
+    def __init__(self, clock: Clock, concurrency: int = 1, pool=None):
+        super().__init__(clock, concurrency, pool=pool)
 
 
 class BatchSchedulerProvider(WorkerPoolProvider):
@@ -114,8 +156,8 @@ class BatchSchedulerProvider(WorkerPoolProvider):
 
     def __init__(self, clock: Clock, nodes: int, submit_rate: float = 1.0,
                  sched_latency: float = 60.0,
-                 admit_window: float | None = None):
-        super().__init__(clock, nodes)
+                 admit_window: float | None = None, pool=None):
+        super().__init__(clock, nodes, pool=pool)
         self.submit_interval = 1.0 / submit_rate
         self.sched_latency = sched_latency
         self.admit_window = (sched_latency / 8.0 if admit_window is None
@@ -148,6 +190,12 @@ class BatchSchedulerProvider(WorkerPoolProvider):
 
 
 class FalkonProvider(Provider):
+    """Adapter registering a `FalkonService` as an engine site::
+
+        svc = FalkonService(clock, FalkonConfig())
+        eng.add_site("pod0", FalkonProvider(svc), capacity=64)
+    """
+
     name = "falkon"
 
     def __init__(self, service: "FalkonService"):

@@ -55,6 +55,21 @@ def _refs(value: Any) -> list[PhysicalRef]:
 
 
 class RestartLog:
+    """Append-only log of datasets successfully produced (paper §3.12).
+
+    Pass to `Engine(restart_log=...)` and mark procedures/tasks
+    ``durable=True``: their results are appended on success, and a rerun
+    of the same program resolves logged outputs immediately instead of
+    re-executing the producing tasks.
+
+    Example::
+
+        log = RestartLog("run.rlog")
+        eng = Engine(restart_log=log)
+        eng.submit("stage1", expensive_fn, durable=True)
+        # ... crash, restart: the same submit returns the logged value
+    """
+
     def __init__(self, path: str):
         self.path = path
         self._log: dict[str, Any] = {}

@@ -33,6 +33,14 @@ class SiteStats:
 
 
 class Site:
+    """One execution site: a provider plus capacity, app validity, and the
+    responsiveness score the balancer steers by.  Created for you by
+    `Engine.add_site`::
+
+        site = eng.add_site("anl_tg", FalkonProvider(svc), capacity=64,
+                            apps={"moldyn"})
+    """
+
     def __init__(self, name: str, provider, capacity: int,
                  apps: set[str] | None = None, score: float = 1.0):
         self.name = name

@@ -19,6 +19,20 @@ _task_ids = itertools.count()
 
 
 class Task:
+    """One schedulable unit: a lightweight record, not an OS thread.
+
+    Carries the callable (`fn`, None for pure-simulation tasks), argument
+    futures (`args`), the output `DataFuture`, declared file `inputs` for
+    the data layer, and retry/provenance bookkeeping.  Engines create these
+    via `Engine.submit`; providers and the Falkon service consume them.
+
+    Example (normally done for you by `Engine.submit`)::
+
+        t = Task("double", lambda x: 2 * x, [21], DataFuture(),
+                 duration=None, app=None, retries=0, durable=False, key="")
+        ok, value, err = execute_task(t)      # -> (True, 42, None)
+    """
+
     __slots__ = ("id", "name", "key", "fn", "args", "output", "duration",
                  "sim_value", "app", "attempt", "retries_left", "site",
                  "host", "created_time", "submit_time", "start_time",

@@ -90,6 +90,27 @@ class Procedure:
 
 
 class Workflow:
+    """SwiftScript-style DSL over any engine (paper §3.1–3.7).
+
+    Binds to anything exposing the engine submission surface — a single
+    `Engine` or a multi-shard `FederatedEngine` — and provides `atomic`
+    procedures, dynamic `foreach`, `then` continuations, `when`
+    conditionals, and `gather` joins; all return futures and run when
+    `run()` drives the clock.
+
+    Example::
+
+        wf = Workflow("demo", engine)
+
+        @wf.atomic
+        def square(x):
+            return x * x
+
+        total = wf.gather([square(i) for i in range(10)])
+        wf.run()
+        assert total.get() == [i * i for i in range(10)]
+    """
+
     def __init__(self, name: str, engine: "AnyEngine"):
         self.name = name
         self.engine = engine

@@ -111,6 +111,12 @@ class Mapper:
 
 
 class ListMapper(Mapper):
+    """Map a logical dataset onto an in-memory list::
+
+        ds = Dataset(ArrayOf(INT), ListMapper([1, 2, 3]))
+        wf.foreach(ds, body)           # members resolved at expansion time
+    """
+
     def __init__(self, items: list, logical_type: Any = None):
         self._items = list(items)
         self.logical_type = logical_type or ArrayOf(None)

@@ -1,0 +1,84 @@
+"""Docs gate (CI `docs` job): fail on broken intra-repo markdown links and
+on missing docstrings for the public API.
+
+Checks:
+  1. every relative link target in README.md / DESIGN.md /
+     benchmarks/README.md exists (http(s)/mailto and pure-anchor links are
+     skipped; a trailing ``#anchor`` is stripped before the existence test);
+  2. every name re-exported in ``repro.core.__all__`` carries a docstring —
+     the class/function's *own* ``__doc__`` (inheritance does not count),
+     or the type's docstring for exported instances (INT, FLOAT, ...).
+
+Run locally:  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+DOC_FILES = ["README.md", "DESIGN.md", os.path.join("benchmarks",
+                                                    "README.md")]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links() -> list[str]:
+    errors = []
+    for rel in DOC_FILES:
+        path = os.path.join(ROOT, rel)
+        if not os.path.exists(path):
+            errors.append(f"{rel}: file missing")
+            continue
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks contain example paths, not navigation links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for lineno_text in text.splitlines():
+            for target in LINK_RE.findall(lineno_text):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                target = target.split("#", 1)[0]
+                if not target:
+                    continue          # pure in-page anchor
+                if not os.path.exists(os.path.join(base, target)):
+                    errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def check_docstrings() -> list[str]:
+    import repro.core as core
+    errors = []
+    for name in core.__all__:
+        obj = getattr(core, name, None)
+        if obj is None:
+            errors.append(f"repro.core.__all__ names {name!r} "
+                          f"but it is not importable")
+            continue
+        if inspect.isclass(obj) or inspect.isroutine(obj):
+            doc = obj.__doc__           # own docstring, not inherited
+        else:
+            doc = type(obj).__doc__     # exported instances (INT, ...)
+        if not doc or not doc.strip():
+            errors.append(f"repro.core.{name}: missing docstring")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_docstrings()
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        print(f"{len(errors)} docs check(s) failed")
+        return 1
+    print("docs checks OK "
+          f"({len(DOC_FILES)} files linked, public API documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
