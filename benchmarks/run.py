@@ -31,6 +31,7 @@ MODULES = [
     "benchmarks.app_moldyn",           # Fig 17/18
     "benchmarks.code_size",            # Table 1
     "benchmarks.vmap_clustering",      # TPU adaptation of clustering
+    "benchmarks.device_batching",      # §11: device-batched executor pool
     "benchmarks.roofline",             # §Roofline (from dry-run artifacts)
     "benchmarks.million_tasks",        # scheduler scale (smoke-sized here)
     "benchmarks.data_diffusion",       # §6: cache-aware data layer

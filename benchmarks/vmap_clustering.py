@@ -75,6 +75,12 @@ def run() -> list[dict]:
     save_json("vmap_clustering", {
         "per_task_s": t_single, "clustered_s": t_cluster,
         "speedup": speedup, "bundles": prov.bundles_executed})
+    # regression bounds (CI smoke tier): clustering must actually fuse and
+    # must show a clear amortization win (the paper's clustering band is
+    # 2-4x; the floor sits below it to absorb noisy shared runners)
+    assert prov.fused_tasks >= N_TASKS, (
+        f"only {prov.fused_tasks}/{N_TASKS} tasks fused")
+    assert speedup >= 1.5, f"clustering speedup {speedup:.2f}x < 1.5x"
     return [{
         "name": "vmap_clustering.tpu_adaptation",
         "us_per_call": 1e6 * t_cluster / N_TASKS,

@@ -10,10 +10,12 @@ Public API:
     Engine, Workflow, Dataset, mappers, FalkonService, providers,
     RestartLog, FaultInjector, SimClock/RealClock.
 """
+from repro.core.clustering import VmapClusteringProvider
 from repro.core.datastore import (DataLayer, DataObject, EvictionPolicy,
                                   ExecutorCache, LFUPolicy, LRUPolicy,
                                   ShardDirectory, SharedStore,
                                   SizeAwarePolicy, StagingCostModel)
+from repro.core.devicepool import DeviceExecutorPool
 from repro.core.engine import Engine
 from repro.core.falkon import DRPConfig, FalkonConfig, FalkonService
 from repro.core.federation import (FederatedEngine, Mailbox,
@@ -44,8 +46,9 @@ __all__ = [
     "Engine", "Workflow", "Procedure", "Task", "task_key",
     "Provider", "WorkerPoolProvider",
     "LocalProvider", "BatchSchedulerProvider", "FalkonProvider",
-    "ClusteringProvider", "FalkonService", "FalkonConfig", "DRPConfig",
-    "ThreadExecutorPool", "ProcessExecutorPool",
+    "ClusteringProvider", "VmapClusteringProvider",
+    "FalkonService", "FalkonConfig", "DRPConfig",
+    "ThreadExecutorPool", "ProcessExecutorPool", "DeviceExecutorPool",
     "DataFuture", "CompletionCounter", "resolved", "when_all",
     "SimClock", "RealClock",
     "RestartLog", "FaultInjector", "RetryPolicy", "TaskFailure",

@@ -1,41 +1,165 @@
-"""TPU-native task clustering: vmap-bundling of small JAX tasks.
+"""Device-native task clustering: vmap-bundling of small JAX tasks.
 
 The paper's clustering (§3.13) amortizes batch-scheduler submission overhead
-by bundling small jobs.  On TPU the analogous per-task cost is *dispatch +
-kernel launch* of many small jitted computations; the TPU-native adaptation
+by bundling small jobs.  On an accelerator the analogous per-task cost is
+*dispatch + kernel launch* of many small jitted computations; the adaptation
 fuses ready tasks that share a callable and argument shapes into ONE batched
 device call via `jax.vmap` — one launch, one dispatch, full-width compute.
 
-benchmarks/microbench.py measures the amortization exactly like the paper's
-Fig 6 measures PBS-overhead amortization.
+Two consumers share the bundle-execution core in this module
+(`execute_bundle` + `vmap_signature`):
+
+  * `VmapClusteringProvider` — a provider for simulated/engine-driven runs:
+    bundles form on the clock thread and execute inline (works under
+    `SimClock`).
+  * `DeviceExecutorPool` (`repro.core.devicepool`, DESIGN.md §11) — the
+    real pool behind `FalkonService(pool=...)`: bundles execute on a
+    dispatcher thread and measured completions re-enter through
+    `Clock.post_release`.
+
+Signature identity is GC-safe: callables are keyed through
+`repro.core.task.stable_fn_key`, never raw ``id(fn)`` — a collected
+callable's address can be reused by a new function, and an id-keyed bundle
+or jit cache would then silently fuse (or run) the wrong callable.
+
+benchmarks/vmap_clustering.py and benchmarks/device_batching.py measure the
+amortization exactly like the paper's Fig 6 measures PBS-overhead
+amortization.
 """
 from __future__ import annotations
 
-from collections import defaultdict
+from time import perf_counter
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.metrics import StreamStat
 from repro.core.providers import Provider
 from repro.core.simclock import Clock
-from repro.core.task import Task, execute_task
+from repro.core.task import Task, arg_signature, execute_task, stable_fn_key
 
 
 def vmap_signature(fn: Callable, args: list) -> tuple:
-    """Tasks sharing this signature can be fused into one vmapped call."""
-    shapes = tuple(
-        (tuple(np.shape(a)), str(np.asarray(a).dtype) if not np.isscalar(a)
-         else type(a).__name__)
-        for a in args)
-    return (id(fn), shapes)
+    """Tasks sharing this signature can be fused into one vmapped call.
+
+    The callable component is a `stable_fn_key` serial (GC-safe), not
+    ``id(fn)``; the argument component is the structural
+    `arg_signature` (shapes + dtypes), so tasks with the same callable
+    but unstackable argument shapes land in different bundles instead of
+    failing the stack at execution time."""
+    return (stable_fn_key(fn), arg_signature(args))
+
+
+def resolve_args(task) -> list:
+    """Argument values of a dispatched task (futures are resolved)."""
+    return [a.get() if hasattr(a, "get") and hasattr(a, "on_done") else a
+            for a in task.args]
+
+
+def _split_result(results, n: int) -> list:
+    """Un-batch a vmapped call's output pytree into n per-task results."""
+    leaves, treedef = jax.tree_util.tree_flatten(results)
+    if not leaves:
+        return [results] * n
+    return [jax.tree_util.tree_unflatten(treedef, [leaf[i] for leaf in leaves])
+            for i in range(n)]
+
+
+def execute_bundle(fn: Callable, tasks: list, vmapped_cache: dict):
+    """Run same-signature tasks as one jitted+vmapped device call.
+
+    Returns ``(results, exec_s, n_fused)``: `results` is a per-task list
+    of ``(ok, value, error)`` aligned with `tasks`, `exec_s` the measured
+    wall seconds of the execution (the fused device call, or the sum of
+    per-task executions on the fallback path), and `n_fused` how many
+    tasks went through the batched call (0 when it was not used).  Fault
+    checks run per task first — a failing check fails only that task and
+    excludes it from the batch.  Any error in the fused path (unstackable
+    args, non-vmappable body) degrades to per-task `execute_task`, never
+    to a lost completion.
+
+    `vmapped_cache` maps ``(stable_fn_key, in_axes)`` to the compiled
+    ``jit(vmap(fn))`` so steady-state bundles pay zero retrace.
+    """
+    n = len(tasks)
+    results: list = [None] * n
+    live: list[int] = []
+    for i, t in enumerate(tasks):
+        chk = getattr(t, "fault_check", None)
+        if chk is not None:
+            try:
+                chk(t)
+            except BaseException as err:  # noqa: BLE001 — per-task failure
+                results[i] = (False, None, err)
+                continue
+        live.append(i)
+    if not live:
+        return results, 0.0, 0
+    if len(live) == 1:
+        i = live[0]
+        t0 = perf_counter()
+        results[i] = _execute_unchecked(tasks[i])
+        return results, perf_counter() - t0, 0
+    t0 = perf_counter()
+    try:
+        arg_lists = [resolve_args(tasks[i]) for i in live]
+        n_args = len(arg_lists[0])
+        # args identical across the bundle broadcast (in_axes=None)
+        # instead of being stacked — no 256x weight copies
+        shared = [all(al[i] is arg_lists[0][i] for al in arg_lists)
+                  for i in range(n_args)]
+        in_axes = tuple(None if s else 0 for s in shared)
+
+        def stack(items):
+            if all(isinstance(a, np.ndarray) for a in items):
+                return jnp.asarray(np.stack(items))  # one h2d transfer
+            return jnp.stack(items)
+
+        stacked = [arg_lists[0][i] if shared[i]
+                   else stack([al[i] for al in arg_lists])
+                   for i in range(n_args)]
+        vkey = (stable_fn_key(fn), in_axes)
+        vfn = vmapped_cache.get(vkey)
+        if vfn is None:
+            vfn = jax.jit(jax.vmap(fn, in_axes=in_axes))
+            vmapped_cache[vkey] = vfn
+        out = jax.device_get(vfn(*stacked))
+        for i, r in zip(live, _split_result(out, len(live))):
+            results[i] = (True, r, None)
+        return results, perf_counter() - t0, len(live)
+    except BaseException:  # noqa: BLE001 — degrade to per-task execution
+        t0 = perf_counter()
+        for i in live:
+            results[i] = _execute_unchecked(tasks[i])
+        return results, perf_counter() - t0, 0
+
+
+def _execute_unchecked(task):
+    """`execute_task` minus the fault check (already run by the bundle)."""
+    fn = getattr(task, "fn", None)
+    if fn is None:
+        return True, getattr(task, "sim_value", None), None
+    try:
+        return True, fn(*resolve_args(task)), None
+    except BaseException as err:  # noqa: BLE001 — engine handles retries
+        return False, None, err
 
 
 class VmapClusteringProvider(Provider):
     """Bundle ready tasks with identical (callable, shapes) signatures into a
     single vmapped execution.  Falls back to per-task execution for
-    singletons or non-batchable tasks."""
+    singletons or non-batchable tasks.
+
+    Bundles key on the task's user `vmap_key` *and* the structural
+    `vmap_signature` — the signature already embeds the callable's stable
+    identity, so there is exactly one level of keying.  Measured execution
+    seconds are recorded per task into bounded `StreamStat`s (`io_stat`,
+    `run_stat`) with the same meaning as the real pools' metrics
+    (DESIGN.md §10), so singleton fallbacks show up in throughput metrics
+    instead of vanishing.
+    """
 
     name = "vmap-cluster"
 
@@ -44,24 +168,40 @@ class VmapClusteringProvider(Provider):
         self.clock = clock
         self.window = window
         self.max_bundle = max_bundle
-        self._pending: dict[Any, list] = defaultdict(list)
+        self._pending: dict[Any, list] = {}
         self._flush_scheduled = False
         self.bundles_executed = 0
         self.tasks_executed = 0
+        self.fused_tasks = 0
         self._vmapped_cache: dict = {}
+        # measured execution seconds per task, same shape as the pool
+        # metrics (io is zero here: no staging path on this provider)
+        self.io_stat = StreamStat(cap=256)
+        self.run_stat = StreamStat(cap=256)
 
     def submit(self, task: Task, when_done: Callable) -> None:
-        key = task.vmap_key
-        if key is None or task.fn is None:
+        if task.vmap_key is None or task.fn is None:
+            t0 = perf_counter()
             ok, v, e = execute_task(task)
+            self._observe(perf_counter() - t0)
+            self.tasks_executed += 1
             when_done(ok, v, e)
             return
-        self._pending[(key, id(task.fn))].append((task, when_done))
-        if len(self._pending[(key, id(task.fn))]) >= self.max_bundle:
-            self._flush_key((key, id(task.fn)))
+        key = (task.vmap_key, vmap_signature(task.fn, resolve_args(task)))
+        bucket = self._pending.get(key)
+        if bucket is None:
+            self._pending[key] = bucket = []
+        bucket.append((task, when_done))
+        if len(bucket) >= self.max_bundle:
+            self._flush_key(key)
         elif not self._flush_scheduled:
             self._flush_scheduled = True
             self.clock.schedule(self.window, self.flush)
+
+    def _observe(self, run_s: float, io_s: float = 0.0) -> None:
+        now = self.clock.now()
+        self.io_stat.observe(now, io_s)
+        self.run_stat.observe(now, run_s)
 
     def flush(self):
         self._flush_scheduled = False
@@ -74,43 +214,21 @@ class VmapClusteringProvider(Provider):
             return
         self.bundles_executed += 1
         self.tasks_executed += len(bundle)
-        if len(bundle) == 1:
-            task, cb = bundle[0]
-            ok, v, e = execute_task(task)
-            cb(ok, v, e)
-            return
         tasks = [t for t, _ in bundle]
-        fn = tasks[0].fn
-        try:
-            arg_lists = [
-                [a.get() if hasattr(a, "on_done") else a for a in t.args]
-                for t in tasks
-            ]
-            n_args = len(arg_lists[0])
-            # args identical across the bundle broadcast (in_axes=None)
-            # instead of being stacked — no 256x weight copies
-            shared = [all(al[i] is arg_lists[0][i] for al in arg_lists)
-                      for i in range(n_args)]
-            in_axes = tuple(None if s else 0 for s in shared)
+        results, exec_s, n_fused = execute_bundle(tasks[0].fn, tasks,
+                                                  self._vmapped_cache)
+        self.fused_tasks += n_fused
+        per_task = exec_s / max(1, len(bundle))
+        for (t, cb), (ok, v, e) in zip(bundle, results):
+            self._observe(per_task)
+            cb(ok, v, e)
 
-            def stack(items):
-                if all(isinstance(a, np.ndarray) for a in items):
-                    return jnp.asarray(np.stack(items))  # one h2d transfer
-                return jnp.stack(items)
-
-            stacked = [arg_lists[0][i] if shared[i]
-                       else stack([al[i] for al in arg_lists])
-                       for i in range(n_args)]
-            vkey = (id(fn), in_axes)
-            vfn = self._vmapped_cache.get(vkey)
-            if vfn is None:
-                vfn = jax.jit(jax.vmap(fn, in_axes=in_axes))
-                self._vmapped_cache[vkey] = vfn
-            results = vfn(*stacked)
-            results = jax.device_get(results)
-            for (t, cb), r in zip(bundle, list(results)):
-                cb(True, r, None)
-        except BaseException as err:  # noqa: BLE001 - fall back per-task
-            for t, cb in bundle:
-                ok, v, e = execute_task(t)
-                cb(ok, v, e)
+    def metrics(self) -> dict:
+        """Bounded snapshot — safe at any task count."""
+        return {
+            "tasks": self.tasks_executed,
+            "bundles": self.bundles_executed,
+            "fused_tasks": self.fused_tasks,
+            "io_s": self.io_stat.summary(),
+            "run_s": self.run_stat.summary(),
+        }

@@ -34,7 +34,7 @@ from repro.core.providers import (BatchSchedulerProvider, ClusteringProvider,
 from repro.core.restart_log import RestartLog
 from repro.core.simclock import Clock, SimClock
 from repro.core.sites import LoadBalancer, Site
-from repro.core.task import Task, task_key
+from repro.core.task import Task, sim_duration, task_key
 
 __all__ = [
     "Engine", "ReadyQueue", "Task", "Provider", "WorkerPoolProvider",
@@ -138,12 +138,21 @@ class Engine:
                  vdc: VDC | None = None,
                  restart_log: RestartLog | None = None,
                  fault_injector: FaultInjector | None = None,
-                 provenance: str = "records"):
+                 provenance: str = "records",
+                 duration_predictor=None):
         self.clock = clock or SimClock()
         self.retry_policy = retry_policy or RetryPolicy()
         self.vdc = vdc or VDC()
         self.restart_log = restart_log
         self.fault_injector = fault_injector
+        # duration prediction (DESIGN.md §11): when a predictor (e.g.
+        # `repro.launch.hlo_cost.DurationPredictor`) is attached, tasks
+        # with a callable and no explicit `duration=` are priced from
+        # their HLO cost *before* dispatch — the predicted seconds then
+        # steer the duration-aware balancer, the data layer's
+        # wait-vs-stage test, and anything else reading `sim_duration`.
+        # None keeps the submit hot path byte-for-byte.
+        self.duration_predictor = duration_predictor
         self.balancer = LoadBalancer([])
         self.tasks_submitted = 0
         self.tasks_completed = 0
@@ -264,6 +273,10 @@ class Engine:
                 if first is None:
                     first = a
         if nfuts == 0:
+            if (duration is None and fn is not None
+                    and self.duration_predictor is not None):
+                task.duration = self.duration_predictor.predict_duration(
+                    fn, args)
             self._dispatch(task)
         elif nfuts == 1:
             # single dependency (serial chains): skip the when_all counter
@@ -338,6 +351,14 @@ class Engine:
             # what lets a resolved upstream chain be freed while its
             # dependents are still queued (DESIGN.md §9 GC contract)
             task.args = ()
+        elif (task.duration is None and task.fn is not None
+                and self.duration_predictor is not None):
+            # future-fed tasks are priced here, when the argument shapes
+            # are known; the predictor's signature cache makes this a
+            # dict probe for every task after the first per signature
+            task.duration = self.duration_predictor.predict_duration(
+                task.fn, [a.get() if isinstance(a, DataFuture) else a
+                          for a in task.args])
         self._dispatch(task)
 
     def _dispatch(self, task: Task, exclude_site: str | None = None):
@@ -375,6 +396,8 @@ class Engine:
         task.site = site
         task.submit_time = now
         site.outstanding += 1
+        if self.balancer.duration_aware:
+            site.outstanding_work += sim_duration(task)
         site.stats.submitted += 1
         site.provider.submit(
             task, lambda ok, v, e: self._done(task, ok, v, e))
@@ -400,6 +423,10 @@ class Engine:
         site = task.site
         now = self.clock.now()
         site.outstanding -= 1
+        if self.balancer.duration_aware:
+            # clamp: float drift must never leave a phantom backlog
+            site.outstanding_work = max(
+                0.0, site.outstanding_work - sim_duration(task))
         if self._pending:
             if not self._drain_scheduled:
                 self._drain_scheduled = True

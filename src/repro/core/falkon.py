@@ -100,7 +100,10 @@ class FalkonService:
     runs task bodies on actual workers, DRP provisioning acquires/releases
     real threads (the pool autoscales with the executor count), and staging
     through an attached data layer performs measured byte copies instead of
-    priced ones.
+    priced ones.  ``pool=DeviceExecutorPool(clock)`` (DESIGN.md §11) keeps
+    the same seam but fuses same-signature tasks into one vmapped device
+    call per bundle; it is fixed-size (``autoscale`` False), so DRP still
+    sizes only the logical executor set.
     """
 
     def __init__(self, clock: Clock, config: FalkonConfig | None = None,
@@ -459,4 +462,8 @@ class FalkonService:
         if self.data_layer is not None:
             m["parked"] = self._parked
             m["data"] = self.data_layer.metrics()
+        if self.pool is not None and hasattr(self.pool, "metrics"):
+            # real path: surface the pool's measured io/run/bundle stats
+            # (e.g. DeviceExecutorPool's device_s / bundle_size summaries)
+            m["pool"] = self.pool.metrics()
         return m

@@ -59,8 +59,10 @@ class WorkerPoolProvider(Provider):
     Simulated by default: a slot occupies the clock for the task's declared
     `duration` and the body executes at the scheduled completion.  Pass
     ``pool=`` (a `ThreadExecutorPool` / `ProcessExecutorPool`,
-    DESIGN.md §10) to run bodies on real workers instead — the slot is held
-    for the *measured* run and durations are ignored::
+    DESIGN.md §10, or a `DeviceExecutorPool`, DESIGN.md §11 — any object
+    with the ``submit(task, done, stage=None)`` seam) to run bodies on
+    real workers instead — the slot is held for the *measured* run and
+    durations are ignored::
 
         prov = LocalProvider(clock, 8, pool=ThreadExecutorPool(clock, 8))
     """

@@ -49,6 +49,12 @@ class Site:
         self.apps = apps  # None = everything installed
         self.score = score
         self.outstanding = 0
+        # predicted seconds of work currently outstanding on this site
+        # (DESIGN.md §11): maintained by the engine when the balancer is
+        # `duration_aware`, from `duration=` specs — explicit, callable,
+        # or filled by a `DurationPredictor` — so `pick` can price
+        # compute *before* running it; stays 0.0 otherwise
+        self.outstanding_work = 0.0
         self.stats = SiteStats()
         self.suspended_until = 0.0
 
@@ -88,12 +94,19 @@ class LoadBalancer:
     not depend on hash seeds or insertion luck.
     """
 
-    def __init__(self, sites: list[Site]):
+    def __init__(self, sites: list[Site], duration_aware: bool = False):
         self.sites = list(sites)
         self._by_app: dict = {}
         # site name -> data layer (DESIGN.md §7) for the affinity term;
         # empty dict == affinity disabled, pick is the score-only heuristic
         self._affinity: dict = {}
+        # duration-aware pricing (DESIGN.md §11): when on, the engine
+        # maintains `Site.outstanding_work` (predicted seconds queued, from
+        # `duration=` specs or the `DurationPredictor`) and `pick` folds it
+        # into the load term, so 100 one-second tasks and 100 millisecond
+        # tasks stop looking like equal backlog.  Off (the default) the
+        # weight formula is byte-identical to the score-only heuristic.
+        self.duration_aware = duration_aware
 
     def add_site(self, site: Site):
         self.sites.append(site)
@@ -125,6 +138,7 @@ class LoadBalancer:
         # layer is registered; otherwise the loop below is byte-identical
         # in behavior to the score-only balancer
         aff = self._affinity if inputs else None
+        dur = self.duration_aware
         best, best_w = None, -1.0
         for s in self.sites_for(app):
             if now < s.suspended_until:
@@ -133,8 +147,12 @@ class LoadBalancer:
                 continue
             # queue-depth-aware proportional weight: equilibrium backlog is
             # proportional to score x capacity, so fast/large sites get more
-            # jobs (paper Fig 11) even when every site is saturated
-            w = s.score * s.capacity / (1.0 + s.outstanding)
+            # jobs (paper Fig 11) even when every site is saturated; the
+            # duration-aware term adds *predicted seconds* of queued work,
+            # so a site holding few-but-long tasks yields to one holding
+            # many-but-tiny tasks when the predictions say it should
+            load = s.outstanding + (s.outstanding_work if dur else 0.0)
+            w = s.score * s.capacity / (1.0 + load)
             if aff:
                 dl = aff.get(s.name)
                 if dl is not None:

@@ -11,11 +11,93 @@ from __future__ import annotations
 
 import hashlib
 import itertools
+import weakref
 from typing import Optional
 
 from repro.core.futures import DataFuture
 
 _task_ids = itertools.count()
+
+
+class FnKeyRegistry:
+    """Stable, GC-safe identity keys for callables.
+
+    ``id(fn)`` is only unique while `fn` is alive: once collected, a new
+    callable can land at the same address, so any cache keyed on raw ids
+    (vmap bundles, compiled-function caches, prediction caches) can
+    silently serve results for the *wrong* callable.  This registry hands
+    out monotonically increasing serials and invalidates an id's entry the
+    moment its callable dies (weakref finalizer), so a reused address gets
+    a fresh serial.  Callables that cannot be weak-referenced (builtins,
+    some C extensions) are pinned with a strong reference instead — their
+    id can then never be reused while the registry lives.
+
+    Single-threaded by contract: call only from the clock thread (the
+    same contract every scheduler object follows, DESIGN.md §10).
+    """
+
+    __slots__ = ("_serial", "_by_id")
+
+    def __init__(self):
+        self._serial = itertools.count()
+        self._by_id: dict = {}     # id(fn) -> (serial, weakref-or-strong-ref)
+
+    def __len__(self) -> int:
+        return len(self._by_id)
+
+    def key(self, fn) -> int:
+        i = id(fn)
+        ent = self._by_id.get(i)
+        if ent is not None:
+            serial, ref = ent
+            target = ref() if isinstance(ref, weakref.ref) else ref
+            if target is fn:
+                return serial
+        serial = next(self._serial)
+        try:
+            ref = weakref.ref(fn, self._make_reaper(i))
+        except TypeError:
+            ref = fn                       # un-weakrefable: pin it
+        self._by_id[i] = (serial, ref)
+        return serial
+
+    def _make_reaper(self, i: int):
+        by_id = self._by_id
+
+        def reap(dead_ref):
+            # only drop the entry if it still belongs to the dead callable
+            # — the id may already have been reused and re-registered
+            ent = by_id.get(i)
+            if ent is not None and ent[1] is dead_ref:
+                del by_id[i]
+
+        return reap
+
+
+_fn_keys = FnKeyRegistry()
+
+
+def stable_fn_key(fn) -> int:
+    """Process-wide stable identity key for a callable (see
+    `FnKeyRegistry`).  Unlike ``id(fn)``, the key is never reused for a
+    different callable, so it is safe in long-lived signature caches."""
+    return _fn_keys.key(fn)
+
+
+def arg_signature(args) -> tuple:
+    """Structural signature of a call's argument values: per-argument
+    ``(shape, dtype-or-type-name)``.  Array-likes (numpy/JAX, anything
+    with `.shape`) contribute shape + dtype; scalars and other literals
+    contribute their type name.  Two calls with equal signatures can be
+    stacked along a new leading axis and executed as one vmapped call."""
+    sig = []
+    for a in args:
+        shape = getattr(a, "shape", None)
+        if shape is not None:
+            sig.append((tuple(shape), str(getattr(a, "dtype", ""))))
+        else:
+            sig.append(((), type(a).__name__))
+    return tuple(sig)
 
 
 class Task:

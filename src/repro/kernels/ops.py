@@ -2,15 +2,30 @@
 
 Each wrapper auto-selects interpret mode off-TPU and is shape/dtype swept
 against the `ref.py` oracles in tests/test_kernels.py.
+
+Two tiers of entry point live here:
+
+  * the jitted kernel wrappers (`flash_attention`, `rglru_scan`,
+    `mamba_scan`) — one call == one fused device computation;
+  * per-example *task bodies* (`matmul_task`, `attention_task`) — plain,
+    unjitted functions over a single example, the granularity the
+    device-batched executor fuses (`repro.core.devicepool`, DESIGN.md
+    §11).  They are deliberately NOT jitted: submitted alone they pay
+    op-by-op dispatch (the overhead the paper's clustering amortizes,
+    §3.13); submitted with a ``vmap_key`` the pool stacks K of them into
+    one ``jit(vmap(...))`` launch.  Their HLO cost is what
+    `repro.launch.hlo_cost.DurationPredictor` prices scheduling with.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.ref import ref_attention
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
 
@@ -33,3 +48,25 @@ def mamba_scan(u, dt, A, Bm, Cm, h0=None, *, chunk=64, block_d=256,
                interpret=None):
     return _mamba(u, dt, A, Bm, Cm, h0, chunk=chunk, block_d=block_d,
                   interpret=interpret)
+
+
+# -- per-example task bodies (device-batched executor granularity) ----------
+
+def matmul_task(x, w):
+    """One example's projection + nonlinearity: ``tanh(x @ w)`` row-summed.
+
+    Shapes: ``x (d,)``, ``w (d, d)`` -> ``(d,)``.  Pure and vmappable; the
+    weight is typically identical across a bundle, so the pool broadcasts
+    it (``in_axes=None``) instead of stacking K copies.
+    """
+    return jnp.sum(jnp.tanh(x @ w), axis=-1) + x
+
+
+def attention_task(q, k, v):
+    """One example's attention, via the reference oracle math.
+
+    Shapes: ``q/k/v (heads, seq, dim)`` for a single example; the pool
+    stacks bundles into the batched ``(K, heads, seq, dim)`` layout
+    `ref_attention` already handles.
+    """
+    return ref_attention(q[None], k[None], v[None])[0]

@@ -471,3 +471,111 @@ class HloModule:
 
 def analyze(hlo_text: str) -> Cost:
     return HloModule(hlo_text).entry_cost()
+
+
+# ---------------------------------------------------------------------------
+# duration prediction (DESIGN.md §11): price compute before running it
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeviceModel:
+    """Roofline parameters used to turn an HLO `Cost` into seconds.
+
+    Defaults are deliberately conservative CPU-backend numbers — for
+    scheduling, only the *relative* pricing between tasks matters (the
+    load balancer and the wait-vs-stage test compare predicted durations
+    against each other and against `StagingCostModel` read times, never
+    against wall time).  Calibrate for a real accelerator by passing the
+    chip's peak flops / HBM bandwidth.
+    """
+
+    peak_flops: float = 5e10       # sustained flops/s
+    mem_bw: float = 2e10           # bytes/s
+    launch_overhead: float = 5e-5  # per-dispatch floor, s
+
+    def seconds(self, cost: Cost) -> float:
+        return self.launch_overhead + max(cost.flops / self.peak_flops,
+                                          cost.bytes / self.mem_bw)
+
+
+class DurationPredictor:
+    """Predict a task body's duration from its optimized HLO — without
+    running it (DESIGN.md §11).
+
+    ``predict_duration(fn, args)`` abstract-evals and host-compiles `fn`
+    at the arguments' shapes, walks the HLO with `analyze`, and converts
+    flops/bytes to seconds through a roofline `DeviceModel`.  No device
+    execution ever happens, so the call is safe on the clock thread; the
+    one-time host-compile cost is amortized by a signature-keyed cache —
+    every later task with the same (callable, shapes) signature is a dict
+    probe.  Failures (bodies jit cannot trace) are cached as None, so a
+    non-JAX task costs one failed trace, not one per task.
+
+    Wire it into an engine so every submitted task with a callable and no
+    explicit ``duration=`` is priced before dispatch::
+
+        pred = DurationPredictor()
+        eng = Engine(clock, duration_predictor=pred)
+        eng.submit("mm", matmul_task, [x, w])   # duration filled by pred
+
+    The predicted `duration` then reaches everything that prices
+    simulated service time: `LoadBalancer.pick` (with
+    ``duration_aware=True``, queued predicted seconds join the load
+    term), the data layer's wait-vs-stage affinity test (parked
+    `local_work` vs `StagingCostModel` staging estimates), and the
+    backpressure/throttle machinery.
+    """
+
+    def __init__(self, device: DeviceModel | None = None):
+        self.device = device or DeviceModel()
+        self._cache: dict = {}
+        self.compiles = 0      # signature misses that ran a host compile
+        self.hits = 0          # served from the signature cache
+
+    # -- signature ------------------------------------------------------
+    def signature(self, fn, args) -> tuple:
+        from repro.core.task import arg_signature, stable_fn_key
+        return (stable_fn_key(fn), arg_signature(args))
+
+    # -- prediction -----------------------------------------------------
+    def predict_cost(self, fn, args) -> Cost | None:
+        """Cached HLO `Cost` for calling ``fn(*args)`` (None when the body
+        cannot be traced/compiled — e.g. a non-JAX callable)."""
+        key = self.signature(fn, args)
+        if key in self._cache:
+            self.hits += 1
+            return self._cache[key]
+        self.compiles += 1
+        try:
+            import jax
+
+            def _abstract(a):
+                shape = getattr(a, "shape", None)
+                dtype = getattr(a, "dtype", None)
+                if shape is not None and dtype is not None:
+                    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+                return a    # python literal: traced as a weak-typed scalar
+
+            lowered = jax.jit(fn).lower(*[_abstract(a) for a in args])
+            cost = analyze(lowered.compile().as_text())
+        except BaseException:  # noqa: BLE001 — unpredictable body
+            cost = None
+        self._cache[key] = cost
+        return cost
+
+    def predict_duration(self, fn, args) -> float | None:
+        """Predicted seconds for ``fn(*args)`` under the device model, or
+        None when the body cannot be priced.  This is the `duration=`
+        feed: `Engine.submit` calls it for tasks with a callable and no
+        explicit duration when a predictor is attached."""
+        cost = self.predict_cost(fn, args)
+        if cost is None:
+            return None
+        return self.device.seconds(cost)
+
+    def metrics(self) -> dict:
+        return {
+            "signatures": len(self._cache),
+            "compiles": self.compiles,
+            "hits": self.hits,
+        }

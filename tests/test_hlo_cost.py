@@ -117,3 +117,58 @@ def test_wrapped_long_lines_parse():
     t = _compile(f, (256, 256), (256, 256))
     c = analyze(t)
     assert c.flops == pytest.approx(8 * 2 * 256 ** 3, rel=0.1)
+
+
+# ---------------------------------------------------------------------------
+# duration prediction over real kernel task bodies (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_task_cost_matches_hand_computation():
+    from repro.kernels.ops import matmul_task
+    from repro.launch.hlo_cost import DurationPredictor
+
+    d = 64
+    pred = DurationPredictor()
+    x = np.ones((d,), np.float32)
+    w = np.ones((d, d), np.float32)
+    c = pred.predict_cost(matmul_task, [x, w])
+    # dominated by the (d,) @ (d, d) contraction: 2*d^2 flops; tanh/sum/add
+    # contribute O(d) on top
+    assert c.flops == pytest.approx(2 * d * d, rel=0.05)
+    # reads x (4d) + w (4d^2), writes the (d,) output: ~4d^2 + O(d)
+    assert c.bytes == pytest.approx(4 * d * d, rel=0.2)
+
+
+def test_attention_task_cost_matches_hand_computation():
+    from repro.kernels.ops import attention_task
+    from repro.launch.hlo_cost import DurationPredictor
+
+    H, S, D = 2, 32, 16
+    pred = DurationPredictor()
+    q = np.ones((H, S, D), np.float32)
+    c = pred.predict_cost(attention_task, [q, q, q])
+    # the two einsums cost 4*H*S^2*D; mask/softmax/scale add a bounded
+    # overhead on top, so the analyzed total sits in [1x, 1.5x] of that
+    core = 4 * H * S * S * D
+    assert core <= c.flops <= 1.5 * core
+
+
+def test_prediction_cache_hits_by_signature():
+    from repro.kernels.ops import matmul_task
+    from repro.launch.hlo_cost import DeviceModel, DurationPredictor
+
+    pred = DurationPredictor(device=DeviceModel())
+    args_a = [np.ones((16,), np.float32), np.ones((16, 16), np.float32)]
+    args_b = [np.zeros((16,), np.float32), np.ones((16, 16), np.float32)]
+    d1 = pred.predict_duration(matmul_task, args_a)
+    # same (callable, shapes) signature, different values: cache hit
+    d2 = pred.predict_duration(matmul_task, args_b)
+    assert d1 == d2
+    assert d1 >= pred.device.launch_overhead
+    assert pred.compiles == 1 and pred.hits == 1
+    # a different shape is a different signature: one more compile
+    pred.predict_duration(matmul_task,
+                          [np.ones((32,), np.float32),
+                           np.ones((32, 32), np.float32)])
+    assert pred.compiles == 2
