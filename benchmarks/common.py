@@ -8,7 +8,8 @@ import time
 
 from repro.core import (BatchSchedulerProvider, ClusteringProvider, DRPConfig,
                         Engine, FalkonConfig, FalkonProvider, FalkonService,
-                        SimClock, Workflow)
+                        MetricsRegistry, SimClock, Tracer, Workflow,
+                        build_report)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
@@ -56,15 +57,58 @@ class PeakRssTracker:
         clock.schedule(0.0, sampler)
 
 
+def attach_observability(eng, services=(), sample_every: int = 16,
+                         **tracer_kw):
+    """Attach one `Tracer` + `MetricsRegistry` to a built engine (or
+    `FederatedEngine`) and its services — the standard benchmark wiring
+    for DESIGN.md §12.  Every component shares the single tracer, so
+    lifecycle spans, DRP allocations, staging bytes, and mailbox flushes
+    land in one deterministic stream; the registry snapshots each
+    component's bounded metrics into the run report.
+
+    Call *after* sites/services are constructed and *before* submitting
+    work.  Returns ``(tracer, registry)``; pass both to `run_measured`
+    (or call `build_report` yourself) to get the standard report schema.
+    """
+    tracer = Tracer(sample_every=sample_every, **tracer_kw)
+    registry = MetricsRegistry()
+    shards = getattr(eng, "shards", None)
+    if shards is not None:             # duck-typed FederatedEngine
+        eng.tracer = tracer
+        for sh in shards:
+            sh.tracer = tracer
+        for mb in eng.mailboxes:
+            mb.tracer = tracer
+        registry.register("federation", eng)
+    else:
+        eng.tracer = tracer
+        registry.register("engine", eng)
+    for i, svc in enumerate(services):
+        svc.tracer = tracer
+        if getattr(svc, "data_layer", None) is not None:
+            svc.data_layer.tracer = tracer
+        if getattr(svc, "pool", None) is not None:
+            svc.pool.tracer = tracer
+        name = getattr(svc, "name", f"svc{i}")
+        if name in registry.names():
+            name = f"{name}#{i}"
+        registry.register(name, svc)
+    registry.register("tracer", tracer)
+    return tracer, registry
+
+
 def run_measured(eng, out, expected_tasks: int,
-                 sample_interval: float) -> dict:
+                 sample_interval: float, tracer=None, registry=None) -> dict:
     """Run a built workload to completion with peak-RSS tracking.
 
     One copy of the measurement protocol for the scale benchmarks: sample
     RSS now (an eagerly-built graph is fully live at this point), track it
     on a clock cadence, capture the makespan at `out`'s resolution (not
     `clock.now()` — the final pending sampler event outlives the
-    workload), and assert completion.
+    workload), and assert completion.  With a `tracer` attached
+    (`attach_observability`), the result additionally carries the
+    standard run report (schema ``repro.run_report/v1``) under
+    ``"report"``.
     """
     tracker = PeakRssTracker()
     tracker.sample()
@@ -77,11 +121,15 @@ def run_measured(eng, out, expected_tasks: int,
     assert out.resolved, "workflow did not complete"
     assert eng.tasks_completed == expected_tasks
     tracker.sample()
-    return {
+    res = {
         "run_s": run_s,
         "makespan_sim_s": done_at[0],
         "peak_rss_mb": tracker.peak_mb,
     }
+    if tracer is not None:
+        res["report"] = build_report(tracer, registry,
+                                     makespan=done_at[0]).to_dict()
+    return res
 
 # paper-calibrated provider parameters (see DESIGN.md §6)
 PAPER = {

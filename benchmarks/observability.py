@@ -1,0 +1,171 @@
+"""Observability overhead smoke + sample-trace generator (DESIGN.md §12).
+
+Two claims are gated here:
+
+  * **Overhead**: a traced 10^5-task run (engine lifecycle hooks with
+    default 1-in-16 sampling) stays within 5% of untraced throughput —
+    the hot-path contract is one ``is not None`` test per hook with no
+    tracer, and a counter bump plus O(1) critical-path update per
+    non-sampled task with one.  Measured interleaved best-of-N so the
+    assertion is robust to CI timer noise; ``OBS_OVERHEAD_TASKS`` scales
+    the task count (default 100,000).
+  * **Boundedness**: the traced run's span store, event logs, and stage
+    table all stay within their caps regardless of task count.
+
+The module also regenerates ``results/sample_trace.json`` — a small
+fully-sampled fMRI run on a traced Falkon pool, exported as Chrome
+trace-event JSON and schema-checked with `tools.trace_view`.  The file is
+committed, the simulation is deterministic, and CI re-validates the
+committed copy, so the sample in the repo is always loadable in
+``chrome://tracing`` / Perfetto.
+"""
+from __future__ import annotations
+
+import gc
+import json
+import os
+import time
+
+from repro.core import (DRPConfig, Engine, FalkonConfig, FalkonProvider,
+                        FalkonService, SimClock, Tracer, build_report)
+
+from benchmarks.common import (RESULTS_DIR, attach_observability,
+                               falkon_engine, fmri_workflow, save_json)
+from benchmarks.million_tasks import build_workload
+
+
+def _measure_once(n_tasks: int, traced: bool) -> tuple[float, object]:
+    """One untimed-build + timed-run of the MolDyn-shaped workload;
+    returns (run wall seconds, tracer or None)."""
+    eng, svc = falkon_engine(executors=512, alloc_latency=81.0,
+                             engine_kwargs={"provenance": "summary"})
+    tracer = None
+    if traced:
+        tracer, _registry = attach_observability(eng, services=[svc])
+    n, out = build_workload(eng, n_tasks, job_s=168.0)
+    # the comparison measures the tracing hooks, not collector scheduling:
+    # without this, the previous run's graph teardown lands as cycle-GC
+    # pauses inside whichever timed region allocates next (±15% noise)
+    gc.collect()
+    gc.disable()
+    t0 = time.monotonic()
+    try:
+        eng.run()
+        wall = time.monotonic() - t0
+    finally:
+        gc.enable()
+    assert out.resolved and eng.tasks_completed == n
+    if traced:
+        assert tracer.tasks_seen == n and tracer.tasks_done == n
+    return wall, tracer
+
+
+def measure_overhead(n_tasks: int, repeats: int = 4) -> dict:
+    """Paired traced-vs-untraced comparison, `repeats` rounds.
+
+    Machine noise here (CPU frequency, cache pressure from the growing
+    heap) is several times the effect being measured, but it drifts
+    slowly — so each round runs both modes back to back and takes their
+    *ratio*, which cancels the shared drift; the in-round ordering bias
+    alternates sign round to round.  The gate uses the minimum round
+    ratio: deterministic hook cost is a floor under every round, so the
+    cleanest round is the accurate one (the classic min-wall estimator,
+    applied to ratios)."""
+    best = {False: float("inf"), True: float("inf")}
+    tracer = None
+    rounds = []
+    for rep in range(repeats):
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        walls = {}
+        for traced in order:
+            walls[traced], tr = _measure_once(n_tasks, traced)
+            if walls[traced] < best[traced]:
+                best[traced] = walls[traced]
+            if tr is not None:
+                tracer = tr
+        rounds.append(walls[True] / walls[False] - 1.0)
+
+    # boundedness: caps hold no matter the task count
+    snap = tracer.snapshot()
+    assert snap["sampled_spans"] <= tracer.max_spans
+    assert all(len(lg) <= lg.cap for lg in tracer.events.values())
+    assert all(len(lg) <= lg.cap for lg in tracer.logs.values())
+    assert tracer.tasks_seen == tracer.tasks_done
+
+    return {
+        "tasks": n_tasks,
+        "untraced_s": round(best[False], 3),
+        "traced_s": round(best[True], 3),
+        "overhead_pct": round(100.0 * min(rounds), 2),
+        "round_overheads_pct": [round(100.0 * r, 2) for r in rounds],
+        "sampled_spans": snap["sampled_spans"],
+        "sample_stride": snap["sample_stride"],
+        "max_spans": tracer.max_spans,
+    }
+
+
+def build_sample_trace(volumes: int = 16) -> tuple[dict, dict]:
+    """Run a small fully-sampled fMRI workflow on a traced Falkon pool and
+    return ``(chrome_trace_dict, report_dict)``.  Deterministic: the same
+    call always produces byte-identical JSON."""
+    clock = SimClock()
+    tracer = Tracer(sample_every=1, max_spans=2048)
+    svc = FalkonService(clock, FalkonConfig(
+        dispatch_overhead=1.0 / 487.0,
+        drp=DRPConfig(max_executors=8, alloc_latency=5.0, alloc_chunk=4)),
+        trace=True, tracer=tracer)
+    eng = Engine(clock, tracer=tracer)
+    eng.add_site("falkon", FalkonProvider(svc), capacity=8)
+    wf, out = fmri_workflow(eng, volumes)
+    wf.run()
+    assert out.resolved
+    trace = tracer.export_chrome_trace()
+    report = build_report(tracer, makespan=clock.now()).to_dict()
+    return trace, report
+
+
+def write_sample_trace(path: str | None = None) -> str:
+    from tools.trace_view import validate_chrome_trace
+
+    trace, _report = build_sample_trace()
+    errors = validate_chrome_trace(trace)
+    assert not errors, errors
+    path = path or os.path.join(RESULTS_DIR, "sample_trace.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(trace, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def run() -> list[dict]:
+    n_tasks = int(os.environ.get("OBS_OVERHEAD_TASKS", "100000"))
+    r = measure_overhead(n_tasks)
+    # acceptance gate: <= 5% throughput cost (best paired round)
+    assert r["overhead_pct"] <= 5.0, r
+
+    sample_path = write_sample_trace()
+    trace, report = build_sample_trace()
+    save_json("observability_report", report)
+
+    rows = [{
+        "name": f"observability.overhead.{n_tasks // 1000}k",
+        "us_per_call": 1e6 * r["traced_s"] / r["tasks"],
+        "derived": (f"{r['overhead_pct']:+.1f}% traced vs untraced "
+                    f"({r['sampled_spans']} spans kept, "
+                    f"stride {r['sample_stride']})"),
+    }, {
+        "name": "observability.sample_trace",
+        "us_per_call": 0.0,
+        "derived": (f"{len(trace['traceEvents'])} events -> "
+                    f"{os.path.basename(sample_path)}; "
+                    f"{report['tasks']['done']} tasks, "
+                    f"cp ratio {report['critical_path_ratio']:.2f}"),
+    }]
+    save_json("observability_overhead", r)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']}: {row['derived']}")

@@ -38,6 +38,7 @@ MODULES = [
     "benchmarks.federation",           # §8: multi-engine federation
     "benchmarks.streaming_expansion",  # §9: windowed graph construction
     "benchmarks.real_throughput",      # §10: real threads, Fig-6 shape
+    "benchmarks.observability",        # §12: tracing overhead + sample trace
 ]
 
 

@@ -27,6 +27,8 @@ from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
 from repro.core.futures import (CompletionCounter, DataFuture, resolved,
                                 when_all)
 from repro.core.metrics import StreamStat
+from repro.core.observability import (BoundedLog, MetricsRegistry, RunReport,
+                                      Span, Tracer, build_report)
 from repro.core.provenance import VDC, InvocationRecord
 from repro.core.providers import (BatchSchedulerProvider, ClusteringProvider,
                                   FalkonProvider, LocalProvider, Provider,
@@ -53,6 +55,8 @@ __all__ = [
     "SimClock", "RealClock",
     "RestartLog", "FaultInjector", "RetryPolicy", "TaskFailure",
     "VDC", "InvocationRecord", "LoadBalancer", "Site", "StreamStat",
+    "Tracer", "Span", "BoundedLog", "MetricsRegistry", "RunReport",
+    "build_report",
     "DataLayer", "DataObject", "SharedStore", "ExecutorCache",
     "StagingCostModel", "EvictionPolicy", "LRUPolicy", "LFUPolicy",
     "SizeAwarePolicy", "ShardDirectory",

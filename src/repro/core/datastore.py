@@ -495,6 +495,9 @@ class DataLayer:
         self.affinity_frac = affinity_frac
         self.max_local_queue = max_local_queue
         self.park_patience = park_patience
+        # observability (DESIGN.md §12): set to a `Tracer` to emit one
+        # `stage_bytes` event per dispatch that staged cold bytes
+        self.tracer = None
         self._holders: dict[str, dict[int, "Executor"]] = {}
         # bounded metrics (DESIGN.md §4): counters + StreamStat reservoirs
         self.hits = 0
@@ -656,6 +659,8 @@ class DataLayer:
         n = hits + misses
         if n:
             self.hit_stat.observe(now, hits / n)
+        if staged and self.tracer is not None:
+            self.tracer.event("stage_bytes", now, staged)
         return io
 
     # -- measured staging (real execution path, DESIGN.md §10) ---------------
@@ -722,6 +727,8 @@ class DataLayer:
         if n:
             self.hit_stat.observe(now, plan.hits / n)
         self.measured_io_stat.observe(now, io_s)
+        if plan.staged and self.tracer is not None:
+            self.tracer.event("stage_bytes", now, plan.staged)
 
     def release_inputs(self, e: "Executor", task) -> None:
         cache = e.cache

@@ -77,12 +77,15 @@ class DeviceExecutorPool:
 
     def __init__(self, clock: Clock, max_bundle: int = 256,
                  linger: float = 0.0, dispatchers: int = 1,
-                 name: str = "device"):
+                 name: str = "device", tracer=None):
         if max_bundle < 1:
             raise ValueError("max_bundle must be >= 1")
         _require_threadsafe_clock(clock, name)
         self.clock = clock
         self.name = name
+        # observability (DESIGN.md §12): each fused bundle emits one
+        # `bundle_fused` event (value = tasks fused); clock thread only
+        self.tracer = tracer
         self.max_bundle = max_bundle
         self.linger = linger
         self._pending: dict[Any, list] = {}
@@ -218,6 +221,8 @@ class DeviceExecutorPool:
         self.device_s += exec_s
         self.bundle_stat.observe(now, len(bundle))
         self.fused_tasks += n_fused
+        if self.tracer is not None and n_fused:
+            self.tracer.event("bundle_fused", now, n_fused)
         for (task, done, _stage), (ok, v, err), io_s, run_s in zip(
                 bundle, out, io_ss, run_ss):
             self.tasks_run += 1

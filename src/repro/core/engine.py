@@ -139,8 +139,14 @@ class Engine:
                  restart_log: RestartLog | None = None,
                  fault_injector: FaultInjector | None = None,
                  provenance: str = "records",
-                 duration_predictor=None):
+                 duration_predictor=None,
+                 tracer=None):
         self.clock = clock or SimClock()
+        # observability (DESIGN.md §12): when a `Tracer` is attached every
+        # task gets lifecycle accounting (exact counters + critical path)
+        # and every k-th task a full span; None keeps each hook to a
+        # single attribute test.
+        self.tracer = tracer
         self.retry_policy = retry_policy or RetryPolicy()
         self.vdc = vdc or VDC()
         self.restart_log = restart_log
@@ -253,6 +259,17 @@ class Engine:
                     inputs=inputs)
         task.created_time = self.clock.now()
         task.vmap_key = vmap_key
+        tr = self.tracer
+        if tr is not None:
+            # the sampling decision (Tracer.task_created) is inlined — a
+            # counter bump and one modulus for the overwhelming non-sampled
+            # majority; ready_t/path0 are stamped in _ready (dependent
+            # tasks) or just below (dependency-free tasks), never in
+            # Task.__init__, so the tracing-off hot path skips the slots
+            tr.tasks_seen = seen = tr.tasks_seen + 1
+            task.span = (tr._new_span(task, task.created_time,
+                                      self.shard_id)
+                         if (seen - 1) % tr._k == 0 else None)
         if self.fault_injector is not None:
             inj = self.fault_injector
 
@@ -273,6 +290,8 @@ class Engine:
                 if first is None:
                     first = a
         if nfuts == 0:
+            if tr is not None:
+                task.path0 = -task.created_time
             if (duration is None and fn is not None
                     and self.duration_predictor is not None):
                 task.duration = self.duration_predictor.predict_duration(
@@ -338,13 +357,40 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _ready(self, task: Task, _f: DataFuture | None = None):
-        for a in task.args:
-            if isinstance(a, DataFuture) and a.failed:
-                task.output.set_error(
-                    TaskFailure(f"upstream failure for {task.name}"))
-                self.tasks_failed += 1
-                task.args = ()
-                return
+        tr = self.tracer
+        if tr is None:
+            for a in task.args:
+                if isinstance(a, DataFuture) and a.failed:
+                    task.output.set_error(
+                        TaskFailure(f"upstream failure for {task.name}"))
+                    self.tasks_failed += 1
+                    task.args = ()
+                    return
+        else:
+            # single pass over the args: the upstream-failure check merged
+            # with the O(1)/task critical-path propagation — path up to
+            # this task's start is the max over its parents' path values,
+            # read here *before* the args are cleared below (DESIGN.md §12)
+            p0 = 0.0
+            for a in task.args:
+                if type(a) is DataFuture:
+                    if a.failed:
+                        task.output.set_error(
+                            TaskFailure(f"upstream failure for {task.name}"))
+                        self.tasks_failed += 1
+                        tr.task_done(task, self.clock.now(), "failed")
+                        task.args = ()
+                        return
+                    p = a.path
+                    if p > p0:
+                        p0 = p
+            now = self.clock.now()
+            # path0 encodes (parent path - ready time): completion adds
+            # `now` back, so the done-path costs one addition per task
+            task.path0 = p0 - now
+            sp = task.span
+            if sp is not None:
+                sp.ready = now
         if task.fn is None and task.vmap_key is None:
             # pure-sim task: the argument values are never read again, so
             # drop them now — in a streaming (windowed) expansion this is
@@ -375,6 +421,8 @@ class Engine:
         if not cands:
             task.output.set_error(TaskFailure(f"no site for {task.name}"))
             self.tasks_failed += 1
+            if self.tracer is not None:
+                self.tracer.task_done(task, self.clock.now(), "failed")
             return True  # consumed (failed), not held
         now = self.clock.now()
         # throttle only matters when there is a choice to steer: with a
@@ -448,6 +496,19 @@ class Engine:
             self._record(task, "ok")
             if self.restart_log is not None and task.durable:
                 self.restart_log.append(task.key, value)
+            tr = self.tracer
+            if tr is not None:
+                # inlined Tracer.task_done: stamp the output's critical-path
+                # length before the set() fires downstream callbacks
+                # (dependents read it in _ready)
+                tr.tasks_done += 1
+                path = task.path0 + now
+                if path > tr.critical_path_s:
+                    tr.critical_path_s = path
+                task.output.path = path
+                sp = task.span
+                if sp is not None:
+                    tr._close_span(sp, task, now, "ok")
             task.args = ()             # resolved chains must be GC-able: a
             task.fault_check = None    # retained record must not pin its
             task.output.set(value)     # upstream futures (DESIGN.md §9)
@@ -460,6 +521,12 @@ class Engine:
         failures[site.name] = failures.get(site.name, 0) + 1
         self._record(task, "retried" if task.retries_left > 0 else "failed",
                      error=str(err))
+        tr = self.tracer
+        if tr is not None:
+            status = "retried" if task.retries_left > 0 else "failed"
+            path = tr.task_done(task, now, status)
+            if status == "failed":
+                task.output.path = path
         if task.retries_left <= 0:
             self.tasks_failed += 1
             task.args = ()
@@ -483,13 +550,15 @@ class Engine:
                            task.start_time - task.submit_time,
                            now - task.start_time)
             return
+        sp = getattr(task, "span", None)
         self.vdc.record(InvocationRecord(
             task_id=str(task.id), name=task.name,
             site=task.site.name if task.site else "",
             host=task.host, submit_time=task.submit_time,
             start_time=task.start_time, end_time=now,
             exit_status=status, attempt=task.attempt,
-            args_repr="", outputs=[task.output.name], error=error))
+            args_repr="", outputs=[task.output.name], error=error,
+            span_id=sp.span_id if sp is not None else ""))
 
     # ------------------------------------------------------------------
     def run(self):

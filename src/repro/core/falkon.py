@@ -12,9 +12,12 @@ queue depth and pool size — the idle-executor pool is a deque, the DRP
 shrink sweep is amortized over the idle timeout instead of scanning every
 executor on every completion, and metrics are bounded `StreamStat`
 summaries.  Construct the service with ``trace=True`` to additionally keep
-the full per-event logs (`queue_len_log`, `alloc_log`, per-executor
-`task_log`) that the Fig-18-style benchmark views need; traces grow with
-task count and are therefore off by default.
+the raw per-event series (`queue_len_log`, `alloc_log`, per-executor
+`task_log`) that the Fig-18-style benchmark views need — these live on a
+`Tracer`'s bounded logs (DESIGN.md §12), so even a traced 10^6-task run
+stays memory-bounded (the seed kept plain lists that grew O(tasks)).
+Pass ``tracer=`` to share the engine's tracer, so DRP allocations and
+affinity redirects land in the same trace as the task lifecycle spans.
 """
 from __future__ import annotations
 
@@ -23,6 +26,7 @@ from collections import deque
 from typing import Callable, Optional
 
 from repro.core.metrics import StreamStat
+from repro.core.observability import BoundedLog, Tracer
 from repro.core.simclock import Clock
 from repro.core.task import execute_task, sim_duration
 
@@ -108,11 +112,18 @@ class FalkonService:
 
     def __init__(self, clock: Clock, config: FalkonConfig | None = None,
                  name: str = "falkon", trace: bool = False,
-                 data_layer=None, pool=None):
+                 data_layer=None, pool=None, tracer=None):
         self.clock = clock
         self.cfg = config or FalkonConfig()
         self.name = name
         self.trace = trace
+        # observability (DESIGN.md §12): component events (DRP allocations,
+        # affinity parks) are recorded whenever a tracer is attached; the
+        # raw series + per-executor task logs additionally require
+        # ``trace=True`` and are bounded by the tracer's log caps
+        if tracer is None and trace:
+            tracer = Tracer()
+        self.tracer = tracer
         # data diffusion (DESIGN.md §7): when a DataLayer is attached, tasks
         # with declared inputs prefer idle executors already caching them and
         # input reads are priced by the staging cost model.  None keeps the
@@ -136,8 +147,12 @@ class FalkonService:
         self.tasks_finished = 0
         self.queue_stat = StreamStat(cap=512)   # queue length per pump
         self.alloc_stat = StreamStat(cap=256)   # executors per allocation
-        self.queue_len_log: list = []
-        self.alloc_log: list = []
+        if trace:
+            self.queue_len_log = tracer.log(f"{name}.queue_len")
+            self.alloc_log = tracer.log(f"{name}.allocs")
+        else:
+            self.queue_len_log: list = []
+            self.alloc_log: list = []
 
     # ------------------------------------------------------------------
     # resource provisioning (DRP)
@@ -156,12 +171,17 @@ class FalkonService:
         self.alloc_stat.observe(now, n)
         if self.trace:
             self.alloc_log.append((now, n))
+        if self.tracer is not None:
+            self.tracer.event("drp_alloc", now, n)
 
         def arrive():
             self._allocating -= n
             for _ in range(n):
                 e = Executor(self._next_eid, f"{self.name}-host{self._next_eid}",
                              self.clock.now())
+                if self.trace:
+                    # bounded Fig-18 per-executor timeline (DESIGN.md §12)
+                    e.task_log = BoundedLog(self.tracer.log_cap)
                 self._next_eid += 1
                 if self.data_layer is not None:
                     self.data_layer.register_executor(e)
@@ -305,6 +325,8 @@ class FalkonService:
                     e.local_q.append(task)   # wait behind the busy holder
                     e.local_work += sim_duration(task)
                     self._parked += 1
+                    if self.tracer is not None:
+                        self.tracer.event("affinity_park", now)
                     continue
             else:
                 e = None
@@ -337,6 +359,10 @@ class FalkonService:
         # extends the task's service time on this executor
         io = (dl.stage_inputs(e, task, self.clock)
               if dl is not None and task.inputs else 0.0)
+        if io:
+            sp = getattr(task, "span", None)
+            if sp is not None:
+                sp.io_s = io      # stage-wait lands on the lifecycle span
         start = self.clock.now() + overhead
         task.start_time = start
         task.host = e.host
@@ -365,6 +391,10 @@ class FalkonService:
         def finish_real(ok, value, err, io_s, run_s):
             if stage is not None:
                 dl.end_staging(stage, io_s, self.clock.now())
+            if io_s:
+                sp = getattr(task, "span", None)
+                if sp is not None:
+                    sp.io_s = io_s    # measured stage-wait onto the span
             self._complete(e, task, ok, value, err, task.start_time,
                            busy_s=io_s + run_s)
 
@@ -386,6 +416,7 @@ class FalkonService:
         end = self.clock.now()
         if self.trace:
             e.task_log.append((start, end))
+            self.tracer.exec_span(self.name, e.host, start, end, task.name)
         dl = self.data_layer
         if dl is not None and task.inputs:
             dl.release_inputs(e, task)

@@ -198,11 +198,12 @@ class Mailbox:
     """
 
     def __init__(self, clock: Clock, shard_id: int, latency: float = 0.0,
-                 transport: MailboxTransport | None = None):
+                 transport: MailboxTransport | None = None, tracer=None):
         self.clock = clock
         self.shard_id = shard_id
         self.latency = latency
         self.transport = transport
+        self.tracer = tracer
         if transport is not None:
             transport.bind(clock, self._deliver)
         self._queue: deque = deque()    # (ready_at, proxy, src), time-sorted
@@ -233,6 +234,8 @@ class Mailbox:
                 proxy.set(src.get())
         self.flushes += 1
         self.batch_stat.observe(self.clock.now(), len(batch))
+        if self.tracer is not None:
+            self.tracer.event("mailbox_flush", self.clock.now(), len(batch))
 
     def _flush(self) -> None:
         self._flush_at = None
@@ -251,6 +254,8 @@ class Mailbox:
                 proxy.set(src.get())
         self.flushes += 1
         self.batch_stat.observe(now, batch)
+        if self.tracer is not None:
+            self.tracer.event("mailbox_flush", now, batch)
         if queue and (self._flush_at is None or queue[0][0] < self._flush_at):
             # undelivered tail (posted mid-window): wake when its own
             # latency elapses.  A mid-flush post may already have scheduled
@@ -347,6 +352,9 @@ class WorkStealer:
             self.steals += 1
             self.tasks_stolen += len(moved)
             self.batch_stat.observe(now, len(moved))
+            tr = getattr(fed, "tracer", None)
+            if tr is not None:
+                tr.event("steal", now, len(moved))
             if sdl is not None:
                 self.restage_bytes_est += restage
                 self.restage_stat.observe(now, restage)
@@ -463,13 +471,21 @@ class FederatedEngine:
                  delivery_latency: float = 0.0,
                  transport: str | Callable[[], MailboxTransport]
                  | None = None,
-                 engine_kwargs: dict | None = None):
+                 engine_kwargs: dict | None = None,
+                 tracer=None):
+        # observability (DESIGN.md §12): one shared tracer across every
+        # shard — spans carry their shard id, mailbox flushes and steals
+        # land as component events, and the clock's deterministic event
+        # order keeps the merged stream reproducible under SimClock
+        self.tracer = tracer
         if isinstance(shards, int):
             if shards < 1:
                 raise ValueError("need at least one shard")
             self.clock = clock or SimClock()
-            shards = [Engine(self.clock, **(engine_kwargs or {}))
-                      for _ in range(shards)]
+            kw = dict(engine_kwargs or {})
+            if tracer is not None:
+                kw.setdefault("tracer", tracer)
+            shards = [Engine(self.clock, **kw) for _ in range(shards)]
         else:
             shards = list(shards)
             if not shards:
@@ -478,6 +494,8 @@ class FederatedEngine:
             for eng in shards:
                 if eng.clock is not self.clock:
                     raise ValueError("all shards must share one clock")
+                if tracer is not None and eng.tracer is None:
+                    eng.tracer = tracer
         self.shards = shards
         self.partitioner = partitioner or hash_partitioner
         self._partition_on_inputs = getattr(self.partitioner,
@@ -494,7 +512,8 @@ class FederatedEngine:
                              f"expected 'queue', a factory, or None")
         self.mailboxes = [
             Mailbox(self.clock, i, delivery_latency,
-                    transport=transport() if transport is not None else None)
+                    transport=transport() if transport is not None else None,
+                    tracer=tracer)
             for i in range(len(shards))]
         self.stealer = stealer if stealer is not None else (
             WorkStealer(self.clock) if steal else None)

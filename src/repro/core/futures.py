@@ -35,9 +35,12 @@ class DataFuture:
     """
 
     # __weakref__ so lifetime contracts (DESIGN.md §9: resolved frontiers
-    # are GC-able) can be observed without retaining the future
+    # are GC-able) can be observed without retaining the future.  "path" is
+    # the critical-path length up to this future (DESIGN.md §12) — always
+    # initialized so the traced engine reads it as a plain attribute on
+    # its hot path; only meaningful when a tracer stamps it at completion
     __slots__ = ("id", "name", "_value", "_error", "_state", "_callbacks",
-                 "__weakref__")
+                 "path", "__weakref__")
 
     PENDING, RESOLVED, FAILED = 0, 1, 2
 
@@ -47,6 +50,7 @@ class DataFuture:
         self._value: Any = None
         self._error: BaseException | None = None
         self._state = self.PENDING
+        self.path = 0.0
         # callback storage is shape-polymorphic to keep the per-future
         # footprint small at 10^6-future scale (DESIGN.md §9): None (no
         # callbacks, the transient majority), a bare callable (exactly one

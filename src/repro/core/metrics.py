@@ -11,11 +11,26 @@ decimation is reproducible under `SimClock` (no RNG).
 """
 from __future__ import annotations
 
+import math
+
+
+def percentile_of(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted sequence (0 when
+    empty).  Deterministic and allocation-free — shared by `StreamStat`
+    reservoirs and the observability layer's span percentiles."""
+    n = len(sorted_vals)
+    if not n:
+        return 0.0
+    idx = min(n - 1, max(0, math.ceil(q * n) - 1))
+    v = sorted_vals[idx]
+    # reservoir entries are (t, v) pairs; bare series are floats
+    return v[1] if isinstance(v, tuple) else v
+
 
 class StreamStat:
     """Rolling summary of a (time, value) series with a bounded sample."""
 
-    __slots__ = ("cap", "count", "total", "peak", "last", "sample",
+    __slots__ = ("cap", "count", "total", "peak", "low", "last", "sample",
                  "_stride", "_skip")
 
     def __init__(self, cap: int = 512):
@@ -25,6 +40,7 @@ class StreamStat:
         self.count = 0
         self.total = 0.0
         self.peak: float | None = None
+        self.low: float | None = None
         self.last: float | None = None
         self.sample: list[tuple[float, float]] = []
         self._stride = 1
@@ -35,6 +51,8 @@ class StreamStat:
         self.total += v
         if self.peak is None or v > self.peak:
             self.peak = v
+        if self.low is None or v < self.low:
+            self.low = v
         self.last = v
         if self._skip:
             self._skip -= 1
@@ -50,13 +68,24 @@ class StreamStat:
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
+    def percentile(self, q: float) -> float:
+        """Streaming percentile estimated from the reservoir (exact until
+        the first decimation, q-quantile of a deterministic stride
+        thinning after).  `q` in [0, 1]."""
+        return percentile_of(sorted(v for _, v in self.sample), q)
+
     def summary(self) -> dict:
+        vals = sorted(v for _, v in self.sample)
         return {
             "count": self.count,
             "total": self.total,
             "mean": self.mean(),
             "peak": self.peak,
+            "min": self.low,
             "last": self.last,
+            "p50": percentile_of(vals, 0.50),
+            "p95": percentile_of(vals, 0.95),
+            "p99": percentile_of(vals, 0.99),
             "samples_kept": len(self.sample),
             "sample_stride": self._stride,
         }

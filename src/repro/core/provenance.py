@@ -29,6 +29,10 @@ class InvocationRecord:
     args_repr: str
     outputs: list[str]
     error: str = ""
+    # tracer span id (DESIGN.md §12): links this invocation document to its
+    # lifecycle span in the run's trace; "" when tracing is off or the task
+    # fell outside the sampling stride
+    span_id: str = ""
 
     @property
     def queue_time(self) -> float:
@@ -79,6 +83,43 @@ class VDC:
 
     def register_dataset(self, name: str, producer: str, meta: dict) -> None:
         self.datasets[name] = {"producer": producer, **meta}
+
+    # -- persistence ---------------------------------------------------
+    def export_jsonl(self, path: str) -> int:
+        """Write the retained records (one JSON object per line, the same
+        shape the ``path=`` append stream produces) plus a trailing
+        ``{"_datasets": ...}`` line carrying the dataset registry.
+        Returns the number of invocation records written."""
+        n = 0
+        with open(path, "w", encoding="utf-8") as f:
+            for rec in self.records:
+                f.write(json.dumps(dataclasses.asdict(rec)) + "\n")
+                n += 1
+            if self.datasets:
+                f.write(json.dumps({"_datasets": self.datasets}) + "\n")
+        return n
+
+    @classmethod
+    def load_jsonl(cls, path: str,
+                   max_records: int | None = None) -> "VDC":
+        """Rebuild a VDC from an `export_jsonl` file (or a ``path=`` append
+        stream): records are replayed through `record`, so the aggregate
+        counters and `summary()` come back exact."""
+        vdc = cls(max_records=max_records)
+        fields = {f.name for f in dataclasses.fields(InvocationRecord)}
+        with open(path, encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                obj = json.loads(line)
+                if "_datasets" in obj:
+                    vdc.datasets.update(obj["_datasets"])
+                    continue
+                # tolerate records written by older schemas
+                vdc.record(InvocationRecord(
+                    **{k: v for k, v in obj.items() if k in fields}))
+        return vdc
 
     # -- queries (paper: "powerful exploration and expressive query") -------
     def by_task(self, name: str) -> list[InvocationRecord]:

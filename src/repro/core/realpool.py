@@ -82,10 +82,15 @@ class ThreadExecutorPool:
 
     autoscale: bool
 
-    def __init__(self, clock: Clock, workers: int = 0, name: str = "threads"):
+    def __init__(self, clock: Clock, workers: int = 0, name: str = "threads",
+                 tracer=None):
         _require_threadsafe_clock(clock, name)
         self.clock = clock
         self.name = name
+        # observability (DESIGN.md §12): completions emit `worker_task`
+        # events (count + measured body seconds); mutated on the clock
+        # thread only, like every other pool counter
+        self.tracer = tracer
         self.autoscale = workers <= 0
         self._q: queue.SimpleQueue = queue.SimpleQueue()
         self._threads: list[threading.Thread] = []
@@ -177,6 +182,8 @@ class ThreadExecutorPool:
         now = self.clock.now()
         self.io_stat.observe(now, io_s)
         self.run_stat.observe(now, run_s)
+        if self.tracer is not None:
+            self.tracer.event("worker_task", now, run_s)
         done(ok, value, err, io_s, run_s)
 
     def metrics(self) -> dict:
@@ -221,12 +228,13 @@ class ProcessExecutorPool:
     autoscale = False
 
     def __init__(self, clock: Clock, workers: int, name: str = "processes",
-                 mp_context: str = "spawn"):
+                 mp_context: str = "spawn", tracer=None):
         if workers < 1:
             raise ValueError("ProcessExecutorPool needs >= 1 worker")
         _require_threadsafe_clock(clock, name)
         self.clock = clock
         self.name = name
+        self.tracer = tracer
         self.workers = workers
         self.mp_context = mp_context
         self._exe = None
@@ -318,6 +326,8 @@ class ProcessExecutorPool:
         now = self.clock.now()
         self.io_stat.observe(now, io_s)
         self.run_stat.observe(now, run_s)
+        if self.tracer is not None:
+            self.tracer.event("worker_task", now, run_s)
         done(ok, value, err, io_s, run_s)
 
     def metrics(self) -> dict:

@@ -115,11 +115,15 @@ class Task:
         ok, value, err = execute_task(t)      # -> (True, 42, None)
     """
 
+    # "span"/"path0" are observability fields (DESIGN.md §12), deliberately
+    # NOT initialized in __init__: the tracing-off hot path never touches
+    # them, and the engine assigns both at submit/ready time when a tracer
+    # is attached ("path0" encodes parent critical path minus ready time).
     __slots__ = ("id", "name", "key", "fn", "args", "output", "duration",
                  "sim_value", "app", "attempt", "retries_left", "site",
                  "host", "created_time", "submit_time", "start_time",
                  "durable", "fault_check", "_falkon_done", "vmap_key",
-                 "site_failures", "inputs")
+                 "site_failures", "inputs", "span", "path0")
 
     def __init__(self, name: str, fn, args, output: DataFuture,
                  duration: float | None, app: str | None,

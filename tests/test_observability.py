@@ -1,0 +1,397 @@
+"""Unit tests for the unified observability layer (DESIGN.md §12):
+
+  * BoundedLog — exact counts, cap bound, deterministic decimation;
+  * Tracer — deterministic span streams across identical SimClock runs,
+    sampling bounds at 10^5 tasks, exact critical path on known DAGs;
+  * Chrome trace export — schema-checked with tools/trace_view.py;
+  * federation — one shared tracer across shards, per-shard-consistent
+    and replay-identical traces, mailbox flush events;
+  * provenance — span ids on InvocationRecords, VDC export_jsonl /
+    load_jsonl round-trip;
+  * StreamStat min + reservoir percentiles; MetricsRegistry; RunReport.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.core import (BoundedLog, Engine, FalkonConfig, DRPConfig,
+                        FalkonProvider, FalkonService, FederatedEngine,
+                        LocalProvider, MetricsRegistry, SimClock,
+                        StreamStat, Tracer, VDC, Workflow, build_report)
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+from tools.trace_view import main as trace_view_main  # noqa: E402
+from tools.trace_view import validate_chrome_trace  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# BoundedLog
+# ---------------------------------------------------------------------------
+
+def test_bounded_log_exact_count_and_cap():
+    lg = BoundedLog(cap=64)
+    for i in range(10_000):
+        lg.append(i)
+    assert lg.count == 10_000
+    assert len(lg) < 64
+    assert lg.stride > 1
+    assert lg[0] == 0                   # first entry stays anchored
+    kept = list(lg)
+    assert kept == sorted(kept)         # append order preserved
+
+
+def test_bounded_log_decimation_is_deterministic():
+    a, b = BoundedLog(cap=32), BoundedLog(cap=32)
+    for i in range(5_000):
+        a.append(i)
+        b.append(i)
+    assert a == b and list(a) == list(b)
+
+
+def test_bounded_log_compares_to_plain_lists():
+    lg = BoundedLog(cap=16)
+    assert lg == []
+    lg.append("x")
+    assert lg == ["x"] and lg != []
+
+
+def test_bounded_log_small_caps_rejected():
+    with pytest.raises(ValueError):
+        BoundedLog(cap=1)
+
+
+# ---------------------------------------------------------------------------
+# Tracer core: determinism, sampling bounds, critical path
+# ---------------------------------------------------------------------------
+
+def _run_traced_fmri(volumes=12, sample_every=1, max_spans=4096):
+    clock = SimClock()
+    tracer = Tracer(sample_every=sample_every, max_spans=max_spans)
+    svc = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=8, alloc_latency=2.0, alloc_chunk=4)),
+        trace=True, tracer=tracer)
+    eng = Engine(clock, tracer=tracer)
+    eng.add_site("falkon", FalkonProvider(svc), capacity=8)
+    wf = Workflow("fmri", eng)
+    stages = [("reorient", 3.0), ("align", 6.0), ("reslice", 4.0)]
+    outs = []
+    for v in range(volumes):
+        f = None
+        for name, dur in stages:
+            f = eng.submit(name, None, [f] if f is not None else [],
+                           duration=dur)
+        outs.append(f)
+    out = wf.gather(outs)
+    wf.run()
+    assert out.resolved
+    return clock, tracer, eng
+
+
+def test_identical_runs_produce_identical_span_streams():
+    _, tr1, _ = _run_traced_fmri()
+    _, tr2, _ = _run_traced_fmri()
+    assert [sp.to_dict() for sp in tr1.spans] == \
+        [sp.to_dict() for sp in tr2.spans]
+    assert tr1.snapshot() == tr2.snapshot()
+    # the exported artifacts are byte-identical too (no RNG, no wall
+    # reads, insertion-ordered dicts)
+    assert json.dumps(tr1.export_chrome_trace(), sort_keys=True) == \
+        json.dumps(tr2.export_chrome_trace(), sort_keys=True)
+
+
+def test_sampling_keeps_memory_bounded_at_1e5_tasks():
+    n = 100_000
+    clock = SimClock()
+    tracer = Tracer(sample_every=4, max_spans=512, event_cap=128,
+                    log_cap=256)
+    eng = Engine(clock, tracer=tracer, provenance="summary")
+    eng.local_site(concurrency=64)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(n)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    # exact counters cover every task; the span store stays capped
+    assert tracer.tasks_seen == n and tracer.tasks_done == n
+    assert len(tracer.spans) <= 512
+    snap = tracer.snapshot()
+    assert snap["sample_stride"] > 4   # the span store decimated en route
+    # closed-span weight coverage is exact: every 4th task carried a span
+    # of weight 4, and store decimation never loses the total
+    assert tracer.span_weight_total == pytest.approx(n)
+    # a dependency-free task is ready at submission, so its path includes
+    # the site-queue wait: the last task's path IS the makespan here
+    assert tracer.critical_path_s == pytest.approx(clock.now())
+
+
+def test_critical_path_exact_on_diamond_dag():
+    clock = SimClock()
+    tracer = Tracer()
+    eng = Engine(clock, tracer=tracer)
+    eng.local_site(concurrency=4)
+    a = eng.submit("a", None, duration=2.0)
+    b = eng.submit("b", None, [a], duration=3.0)
+    c = eng.submit("c", None, [a], duration=7.0)
+    d = eng.submit("d", None, [b, c], duration=5.0)
+    eng.run()
+    assert d.resolved
+    # a -> c -> d is the long chain: 2 + 7 + 5
+    assert tracer.critical_path_s == pytest.approx(14.0)
+    rep = build_report(tracer, makespan=clock.now()).to_dict()
+    assert rep["critical_path_s"] == pytest.approx(14.0)
+    assert rep["critical_path_ratio"] == pytest.approx(1.0)
+
+
+def test_retries_and_failures_are_counted():
+    from repro.core.faults import FaultInjector, RetryPolicy
+    clock = SimClock()
+    tracer = Tracer()
+    eng = Engine(clock, tracer=tracer,
+                 retry_policy=RetryPolicy(max_retries=3),
+                 fault_injector=FaultInjector().fail_first_n("flaky", 2))
+    eng.local_site(concurrency=2)
+    ok = eng.submit("solid", lambda: "ok")
+    fl = eng.submit("flaky", lambda: "ok")
+    eng.run()
+    assert ok.resolved and fl.resolved
+    assert tracer.tasks_done == 2
+    assert tracer.tasks_retried == 2
+    assert tracer.tasks_failed == 0
+    # the surviving span reports the final attempt number
+    flaky_spans = [sp for sp in tracer.spans if sp.name == "flaky"]
+    assert flaky_spans and flaky_spans[0].attempt == 2
+    assert flaky_spans[0].status == "ok"
+
+
+def test_terminal_failure_closes_span_as_failed():
+    from repro.core.faults import FaultInjector, RetryPolicy
+    clock = SimClock()
+    tracer = Tracer()
+    eng = Engine(clock, tracer=tracer,
+                 retry_policy=RetryPolicy(max_retries=1),
+                 fault_injector=FaultInjector().fail_first_n("doomed", 10))
+    eng.local_site(concurrency=1)
+    out = eng.submit("doomed", lambda: "ok")
+    eng.run()
+    assert out.failed
+    assert tracer.tasks_failed == 1 and tracer.tasks_done == 0
+    assert tracer.tasks_retried == 1
+    sp = tracer.spans[0]
+    assert sp.status == "failed"
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_is_schema_valid_and_loadable(tmp_path):
+    _, tracer, _ = _run_traced_fmri()
+    path = str(tmp_path / "trace.json")
+    trace = tracer.export_chrome_trace(path)
+    assert validate_chrome_trace(trace) == []
+    with open(path, encoding="utf-8") as f:
+        reloaded = json.load(f)
+    assert validate_chrome_trace(reloaded) == []
+    events = reloaded["traceEvents"]
+    phases = {e["ph"] for e in events}
+    assert {"M", "X", "C"} <= phases     # metadata, spans, counters
+    # metadata events sort ahead of data so viewers name tracks up front
+    first_data = next(i for i, e in enumerate(events) if e["ph"] != "M")
+    assert all(e["ph"] != "M" for e in events[first_data:])
+    # lifecycle spans carry their span ids and status
+    xs = [e for e in events if e["ph"] == "X" and e.get("cat") == "task"]
+    assert xs and all(e["args"]["status"] == "ok" for e in xs)
+    assert reloaded["otherData"]["schema"] == "repro.chrome_trace/v1"
+    # the CLI validates and summarizes it, exit 0
+    assert trace_view_main([path, "--validate"]) == 0
+    assert trace_view_main([path]) == 0
+
+
+def test_trace_view_rejects_malformed_artifacts(tmp_path, capsys):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [{"ph": "X", "pid": "oops"}]}))
+    assert trace_view_main([str(bad)]) == 1
+    unknown = tmp_path / "unknown.json"
+    unknown.write_text(json.dumps({"schema": "something/else"}))
+    assert trace_view_main([str(unknown)]) == 1
+    capsys.readouterr()
+
+
+def test_run_report_renders_via_trace_view(tmp_path):
+    clock, tracer, _ = _run_traced_fmri()
+    rep = build_report(tracer, makespan=clock.now())
+    path = str(tmp_path / "report.json")
+    rep.to_json(path)
+    assert trace_view_main([path, "--validate"]) == 0
+    assert trace_view_main([path]) == 0
+
+
+# ---------------------------------------------------------------------------
+# federation: shared tracer, per-shard consistency, replay determinism
+# ---------------------------------------------------------------------------
+
+def _run_traced_federation(n_shards=2, chains=40, length=4):
+    clock = SimClock()
+    tracer = Tracer()
+    fed = FederatedEngine(n_shards, clock=clock, tracer=tracer,
+                          delivery_latency=0.5,
+                          engine_kwargs={"provenance": "summary"})
+    for i, eng in enumerate(fed.shards):
+        eng.add_site(f"local{i}", LocalProvider(clock, concurrency=8),
+                     capacity=8)
+    wf = Workflow("fed", fed)
+    outs = []
+    for c in range(chains):
+        f = None
+        for s in range(length):
+            f = fed.submit(f"stage{s}", None,
+                           [f] if f is not None else [], duration=1.0)
+        outs.append(f)
+    out = wf.gather(outs)
+    wf.run()
+    assert out.resolved
+    return clock, tracer, fed
+
+
+def test_federated_runs_share_one_consistent_tracer():
+    _, tracer, fed = _run_traced_federation()
+    n = sum(e.tasks_completed for e in fed.shards)
+    assert tracer.tasks_seen == n and tracer.tasks_done == n
+    # every span belongs to a real shard, and under the default hash
+    # partitioner no shard is silent
+    shards = {sp.shard for sp in tracer.spans}
+    assert shards <= set(range(len(fed.shards))) and len(shards) > 1
+    # cross-shard proxies flow through mailboxes, which trace their flushes
+    if fed.cross_shard_edges:
+        assert tracer.event_counts()["mailbox_flush"]["count"] > 0
+    # chrome export splits tracks per shard
+    trace = tracer.export_chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    procs = {e["args"]["name"] for e in trace["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {f"shard{s}" for s in shards} <= procs
+
+
+def test_federated_traces_replay_identically():
+    _, tr1, _ = _run_traced_federation()
+    _, tr2, _ = _run_traced_federation()
+    assert [sp.to_dict() for sp in tr1.spans] == \
+        [sp.to_dict() for sp in tr2.spans]
+    assert tr1.snapshot() == tr2.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# provenance: span ids + export/reload round-trip
+# ---------------------------------------------------------------------------
+
+def test_invocation_records_carry_span_ids_and_roundtrip(tmp_path):
+    clock = SimClock()
+    tracer = Tracer(sample_every=2)
+    eng = Engine(clock, tracer=tracer, provenance="records")
+    eng.local_site(concurrency=4)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(10)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    recs = eng.vdc.records
+    assert len(recs) == 10
+    stamped = [r for r in recs if r.span_id]
+    assert len(stamped) == 5            # every 2nd submitted task sampled
+    span_ids = {sp.span_id for sp in tracer.spans}
+    assert {r.span_id for r in stamped} == span_ids
+
+    path = str(tmp_path / "vdc.jsonl")
+    n = eng.vdc.export_jsonl(path)
+    assert n == 10
+    vdc2 = VDC.load_jsonl(path)
+    assert len(vdc2.records) == 10
+    assert vdc2.summary() == eng.vdc.summary()
+    assert [r.span_id for r in vdc2.records] == [r.span_id for r in recs]
+
+
+# ---------------------------------------------------------------------------
+# StreamStat min + percentiles
+# ---------------------------------------------------------------------------
+
+def test_stream_stat_min_and_percentiles_exact_when_unsampled():
+    s = StreamStat(cap=1024)
+    vals = [float(v) for v in (5, 1, 9, 3, 7, 2, 8, 4, 6, 10)]
+    for i, v in enumerate(vals):
+        s.observe(float(i), v)
+    summ = s.summary()
+    assert summ["min"] == 1.0 and summ["peak"] == 10.0
+    assert summ["p50"] == 5.0
+    assert summ["p95"] == summ["p99"] == 10.0
+    assert s.percentile(0.5) == 5.0
+
+
+def test_stream_stat_percentiles_bounded_under_decimation():
+    s = StreamStat(cap=32)
+    n = 50_000
+    for i in range(n):
+        s.observe(float(i), float(i % 1000))
+    summ = s.summary()
+    assert summ["min"] == 0.0 and summ["peak"] == 999.0
+    assert 0.0 <= summ["p50"] <= 999.0
+    assert summ["p50"] <= summ["p95"] <= summ["p99"] <= summ["peak"]
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry + RunReport
+# ---------------------------------------------------------------------------
+
+def test_metrics_registry_normalizes_sources():
+    reg = MetricsRegistry()
+    st = StreamStat()
+    st.observe(0.0, 3.0)
+    reg.register("stat", st)
+    reg.register("plain", {"k": 1})
+    reg.register("fn", lambda: {"v": 2})
+    snap = reg.snapshot()
+    assert snap["stat"]["count"] == 1 and snap["stat"]["min"] == 3.0
+    assert snap["plain"] == {"k": 1} and snap["fn"] == {"v": 2}
+    json.dumps(snap)                     # JSON-able end to end
+    with pytest.raises(ValueError):
+        reg.register("stat", st)
+
+
+def test_run_report_schema_and_breakdown():
+    clock, tracer, eng = _run_traced_fmri(volumes=10)
+    reg = MetricsRegistry()
+    reg.register("engine", eng)
+    rep = build_report(tracer, reg, makespan=clock.now())
+    p = rep.to_dict()
+    assert p["schema"] == "repro.run_report/v1"
+    assert p["tasks"]["done"] == tracer.tasks_done
+    assert set(p["stages"]) == {"reorient", "align", "reslice"}
+    # full sampling, no decimation: per-stage totals are exact
+    assert p["stages"]["align"]["count_est"] == 10
+    assert p["stages"]["align"]["run_s_est"] == pytest.approx(60.0)
+    assert 0.0 < p["critical_path_ratio"] <= 1.0 + 1e-9
+    for key in ("queue_wait_s", "stage_wait_s", "run_s"):
+        blk = p["percentiles"][key]
+        assert blk["min"] <= blk["p50"] <= blk["p95"] <= blk["max"]
+    util = p["utilization"]["sites"]
+    assert "falkon" in util and max(util["falkon"]) > 0
+    assert "engine" in p["components"]
+    text = rep.format()
+    assert "critical path" in text and "align" in text
+
+
+def test_falkon_trace_logs_ride_the_tracer():
+    """`FalkonService(trace=True)` without an explicit tracer self-hosts
+    one: the legacy log attributes stay usable but are bounded now."""
+    clock = SimClock()
+    svc = FalkonService(clock, FalkonConfig(
+        drp=DRPConfig(max_executors=4, alloc_latency=1.0, alloc_chunk=2)),
+        trace=True)
+    assert svc.tracer is not None
+    eng = Engine(clock)
+    eng.add_site("f", FalkonProvider(svc), capacity=4)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(50)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    assert isinstance(svc.queue_len_log, BoundedLog)
+    assert svc.queue_len_log.count == svc.queue_stat.count
+    assert len(svc.tracer.exec_spans) > 0
+    assert svc.tracer.event_counts()["drp_alloc"]["count"] >= 1

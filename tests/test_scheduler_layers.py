@@ -170,29 +170,38 @@ def test_bounded_metrics_match_unbounded_aggregates_10k():
     eng_t, svc_t = _run_falkon(n, trace=True)
     eng_b, svc_b = _run_falkon(n, trace=False)
 
-    # trace mode populated the full logs; bounded mode kept them empty
+    # trace mode populated the raw logs; bounded mode kept them empty
     assert len(svc_t.queue_len_log) > 0 and len(svc_t.alloc_log) > 0
-    assert sum(len(e.task_log) for e in svc_t.executors) == n
+    assert sum(e.task_log.count for e in svc_t.executors) == n
     assert svc_b.queue_len_log == [] and svc_b.alloc_log == []
     assert all(e.task_log == [] for e in svc_b.executors)
 
-    # ... but the streaming summaries agree exactly with the full traces
+    # the raw logs are *bounded* now (DESIGN.md §12): exact .count with
+    # capped kept entries, instead of the seed's O(tasks) plain lists
+    assert svc_t.queue_len_log.count == svc_t.queue_stat.count
+    assert len(svc_t.queue_len_log) <= svc_t.queue_len_log.cap
+    assert svc_t.alloc_log.count == svc_t.alloc_stat.count
+    assert all(len(e.task_log) <= e.task_log.cap for e in svc_t.executors)
+
+    # ... and the streaming summaries agree exactly across modes
     assert svc_b.dispatched == svc_t.dispatched == n
     assert svc_b.tasks_finished == n
     assert svc_b.peak_queue == svc_t.peak_queue
-    assert svc_b.queue_stat.count == len(svc_t.queue_len_log)
-    assert svc_b.queue_stat.peak == max(q for _, q in svc_t.queue_len_log)
-    assert svc_b.queue_stat.total == \
-        pytest.approx(sum(q for _, q in svc_t.queue_len_log))
-    assert svc_b.alloc_stat.count == len(svc_t.alloc_log)
-    assert svc_b.alloc_stat.total == sum(k for _, k in svc_t.alloc_log)
+    assert svc_b.queue_stat.count == svc_t.queue_stat.count
+    assert svc_b.queue_stat.peak == svc_t.queue_stat.peak
+    assert svc_b.queue_stat.total == pytest.approx(svc_t.queue_stat.total)
+    assert svc_b.alloc_stat.count == svc_t.alloc_stat.count
+    assert svc_b.alloc_stat.total == svc_t.alloc_stat.total
     assert sum(e.tasks_done for e in svc_b.executors) == \
-        sum(len(e.task_log) for e in svc_t.executors)
+        sum(e.task_log.count for e in svc_t.executors)
 
-    # reservoir stays bounded and is a subset of the full trace
+    # reservoirs stay bounded and identical runs keep identical reservoirs
+    # (deterministic decimation — no RNG anywhere in the metrics path)
     assert len(svc_b.queue_stat.sample) < svc_b.queue_stat.cap
-    trace_set = set(svc_t.queue_len_log)
-    assert all(s in trace_set for s in svc_b.queue_stat.sample)
+    assert svc_b.queue_stat.sample == svc_t.queue_stat.sample
+    # decimation never manufactures values: every kept queue-length entry
+    # is bounded by the exact peak counter
+    assert max(q for _, q in svc_t.queue_len_log) <= svc_t.peak_queue
 
     # summary-mode provenance: same aggregate counts, no stored records
     assert eng_b.vdc.summary()["invocations"] == \

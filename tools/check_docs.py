@@ -5,9 +5,10 @@ Checks:
   1. every relative link target in README.md / DESIGN.md /
      benchmarks/README.md exists (http(s)/mailto and pure-anchor links are
      skipped; a trailing ``#anchor`` is stripped before the existence test);
-  2. every name re-exported in ``repro.core.__all__`` carries a docstring —
-     the class/function's *own* ``__doc__`` (inheritance does not count),
-     or the type's docstring for exported instances (INT, FLOAT, ...).
+  2. every name exported in ``repro.core.__all__`` and
+     ``repro.core.observability.__all__`` carries a docstring — the
+     class/function's *own* ``__doc__`` (inheritance does not count), or
+     the type's docstring for exported instances (INT, FLOAT, ...).
 
 Run locally:  python tools/check_docs.py
 """
@@ -50,13 +51,14 @@ def check_links() -> list[str]:
     return errors
 
 
-def check_docstrings() -> list[str]:
-    import repro.core as core
+def _check_module_all(modname: str) -> list[str]:
+    import importlib
+    mod = importlib.import_module(modname)
     errors = []
-    for name in core.__all__:
-        obj = getattr(core, name, None)
+    for name in mod.__all__:
+        obj = getattr(mod, name, None)
         if obj is None:
-            errors.append(f"repro.core.__all__ names {name!r} "
+            errors.append(f"{modname}.__all__ names {name!r} "
                           f"but it is not importable")
             continue
         if inspect.isclass(obj) or inspect.isroutine(obj):
@@ -64,8 +66,13 @@ def check_docstrings() -> list[str]:
         else:
             doc = type(obj).__doc__     # exported instances (INT, ...)
         if not doc or not doc.strip():
-            errors.append(f"repro.core.{name}: missing docstring")
+            errors.append(f"{modname}.{name}: missing docstring")
     return errors
+
+
+def check_docstrings() -> list[str]:
+    return (_check_module_all("repro.core")
+            + _check_module_all("repro.core.observability"))
 
 
 def main() -> int:

@@ -1,0 +1,169 @@
+"""Render and validate observability artifacts from the command line
+(DESIGN.md §12).
+
+Two artifact kinds, auto-detected by schema:
+
+  * Chrome trace-event JSON (``Tracer.export_chrome_trace``) — validated
+    against the trace-event contract (required keys per phase type,
+    numeric ts/dur, metadata before data when sorted) and summarized as
+    per-track span/counter counts.  Load the same file in
+    ``chrome://tracing`` or https://ui.perfetto.dev for the visual view.
+  * Run reports (``build_report(...).to_json``, schema
+    ``repro.run_report/v1``) — rendered as the standard human-readable
+    breakdown (critical path, per-stage totals, wait percentiles,
+    per-site utilization).
+
+Usage::
+
+    python tools/trace_view.py trace.json            # auto-detect + render
+    python tools/trace_view.py trace.json --validate # schema check only
+    python tools/trace_view.py report.json --json    # re-emit normalized
+
+Exit status is non-zero on a malformed artifact, so CI can gate on it
+(the ``docs`` job runs this against the committed sample trace).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import Counter
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+_PHASES = {"X", "B", "E", "C", "i", "I", "M", "b", "e", "n", "s", "t", "f"}
+
+
+def validate_chrome_trace(trace: dict) -> list[str]:
+    """Structural validation of a Chrome trace-event JSON object; returns
+    a list of problems (empty = valid)."""
+    errors = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            errors.append(f"{where}: bad phase {ph!r}")
+            continue
+        if "name" not in ev:
+            errors.append(f"{where}: missing name")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int):
+                errors.append(f"{where}: {key} must be an integer")
+        if ph == "M":
+            continue                    # metadata events carry no ts
+        if not isinstance(ev.get("ts"), (int, float)):
+            errors.append(f"{where}: ts must be numeric")
+        if ph == "X" and not isinstance(ev.get("dur"), (int, float)):
+            errors.append(f"{where}: complete event missing numeric dur")
+        if ph == "C" and "args" not in ev:
+            errors.append(f"{where}: counter event missing args")
+        if len(errors) > 20:
+            errors.append("... (truncated)")
+            break
+    return errors
+
+
+def summarize_chrome_trace(trace: dict) -> str:
+    events = trace["traceEvents"]
+    procs: dict[int, str] = {}
+    threads: dict[tuple, str] = {}
+    by_kind: Counter = Counter()
+    per_track: Counter = Counter()
+    t_max = 0.0
+    for ev in events:
+        ph = ev["ph"]
+        if ph == "M":
+            if ev["name"] == "process_name":
+                procs[ev["pid"]] = ev["args"]["name"]
+            elif ev["name"] == "thread_name":
+                threads[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+            continue
+        by_kind[ph] += 1
+        per_track[(ev["pid"], ev.get("tid", 0))] += 1
+        end = ev.get("ts", 0.0) + ev.get("dur", 0.0)
+        if end > t_max:
+            t_max = end
+    lines = [f"chrome trace: {len(events)} events, "
+             f"{len(procs)} tracks, span {t_max / 1e6:.3f} s"]
+    other = trace.get("otherData", {})
+    if other:
+        keys = ("tasks_seen", "tasks_done", "tasks_failed",
+                "critical_path_s", "sample_stride")
+        known = {k: other[k] for k in keys if k in other}
+        if known:
+            lines.append("  run: " + ", ".join(
+                f"{k}={v}" for k, v in known.items()))
+    lines.append("  events by phase: " + ", ".join(
+        f"{k}={v}" for k, v in sorted(by_kind.items())))
+    for (pid, tid), n in sorted(per_track.items()):
+        pname = procs.get(pid, f"pid{pid}")
+        tname = threads.get((pid, tid), "" if tid == 0 else f"tid{tid}")
+        label = f"{pname}/{tname}" if tname else pname
+        lines.append(f"  track {label:<32} {n} events")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="render/validate repro traces and run reports")
+    ap.add_argument("path", help="chrome trace or run-report JSON file")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check only, no rendering")
+    ap.add_argument("--json", action="store_true",
+                    help="re-emit the parsed artifact as normalized JSON")
+    args = ap.parse_args(argv)
+
+    with open(args.path, encoding="utf-8") as f:
+        data = json.load(f)
+
+    if "traceEvents" in data:
+        errors = validate_chrome_trace(data)
+        for e in errors:
+            print(f"FAIL {e}")
+        if errors:
+            print(f"{len(errors)} trace problem(s) in {args.path}")
+            return 1
+        if args.json:
+            json.dump(data, sys.stdout, indent=2)
+            print()
+        elif args.validate:
+            print(f"valid chrome trace: {args.path} "
+                  f"({len(data['traceEvents'])} events)")
+        else:
+            print(summarize_chrome_trace(data))
+        return 0
+
+    from repro.core.observability import REPORT_SCHEMA, RunReport
+    schema = data.get("schema")
+    if schema != REPORT_SCHEMA:
+        print(f"FAIL {args.path}: unrecognized artifact "
+              f"(schema={schema!r}; expected a chrome trace with "
+              f"'traceEvents' or a {REPORT_SCHEMA} report)")
+        return 1
+    required = ("makespan_s", "tasks", "critical_path_s", "stages",
+                "percentiles", "utilization")
+    missing = [k for k in required if k not in data]
+    if missing:
+        print(f"FAIL {args.path}: report missing keys {missing}")
+        return 1
+    if args.json:
+        json.dump(data, sys.stdout, indent=2)
+        print()
+    elif args.validate:
+        print(f"valid run report: {args.path} "
+              f"({data['tasks']['done']} tasks done)")
+    else:
+        print(RunReport(data).format())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
