@@ -1,0 +1,218 @@
+"""Headline health-recovery benchmark (DESIGN.md §13): a monitored run
+routes around a failing site and recovers most of the lost throughput.
+
+Scenario: 4 Falkon sites x 64 executors run a flat bag of N tasks
+(``HEALTH_RECOVERY_TASKS``, default 20,000).  At t = 50% of the ideal
+makespan one site starts failing half its tasks *slowly* (each failure
+occupies its executor for `FAIL_LATENCY` seconds — the fail-slow mode
+that actually hurts: fast failures just retry, slow ones clog executors
+and strand queued work behind them).  Three runs:
+
+  * **blind**     — no monitor.  The balancer's score decay sheds some
+    load, but the failing site keeps winning a share of placements, its
+    queue traps tasks behind slow failures, and Falkon host suspension
+    thrashes (suspend / probe / fail) until the end of the run.
+  * **monitored** — a `HealthMonitor` watches the same workload: windowed
+    error rate degrades -> drains (suspending the site and revoking its
+    queued tasks back to the engine, which re-places them on healthy
+    sites without charging retries) -> blacklists after the failed
+    probe.  The JSONL metrics stream lands in
+    ``results/health_recovery_stream.jsonl``
+    (watch live with ``python tools/live_monitor.py <file> --follow``).
+  * **monitored replay** — same seed, second run: the health transition
+    log must be byte-identical (the SimClock determinism contract).
+
+Gates (the acceptance criteria for DESIGN.md §13):
+
+  * recovery ratio — monitored tasks/s over the degraded interval (fault
+    onset -> that run's own last completion) >= 1.5x the blind run's;
+  * the failing site is blacklisted within one rolling window of onset;
+  * the two monitored runs' transition logs are byte-identical;
+  * the emitted stream validates against ``repro.metrics_stream/v1``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core import (DRPConfig, Engine, FalkonConfig, FalkonProvider,
+                        FalkonService, FaultInjector, HealthConfig,
+                        HealthMonitor, RetryPolicy, SimClock, Tracer)
+
+from benchmarks.common import RESULTS_DIR, save_json
+
+JOB_S = 4.0          # per-task simulated duration
+N_SITES = 4
+CAP = 64             # executors per site
+FAIL_SITE = "site3"
+FAIL_P = 0.5
+FAIL_LATENCY = 2 * JOB_S   # a failure holds its executor this long
+SEED = 11
+
+# Tuned for the scenario.  The budget is tight: failures are fail-slow,
+# so the first failed attempt only *lands* in the windowed stats at
+# onset + FAIL_LATENCY (8 s), and the whole degrade -> drain -> probe ->
+# blacklist ladder must fit in the remaining 12 s.  The healthy sites run
+# at zero error, so the thresholds can sit low without false drains; the
+# short drain backoff makes the (failed) probe — and with it the second
+# consecutive drain, which blacklists — follow within a tick or two.
+MONITOR_CFG = HealthConfig(
+    window=20.0, buckets=10, min_samples=8,
+    degrade_error_rate=0.04, drain_error_rate=0.10,
+    blacklist_error_rate=0.30, recover_error_rate=0.05,
+    drain_backoff=2.0, backoff_factor=2.0, blacklist_backoff=100000.0,
+    blacklist_after_drains=2, revoke_on_drain=True, emit_interval=5.0)
+
+
+def fault_onset(n: int) -> float:
+    """Fault start: 50% of the ideal (all-sites-healthy) makespan."""
+    return 0.5 * n * JOB_S / (N_SITES * CAP)
+
+
+def run_once(n: int, monitored: bool, stream_path: str | None = None) -> dict:
+    clock = SimClock()
+    tracer = Tracer(sample_every=64)
+    t_fault = fault_onset(n)
+    inj = FaultInjector(seed=SEED, clock=clock)
+    inj.fail_site_window(FAIL_SITE, FAIL_P, start=t_fault,
+                         latency=FAIL_LATENCY)
+    eng = Engine(clock, tracer=tracer, fault_injector=inj,
+                 retry_policy=RetryPolicy(max_retries=8, backoff=1.0),
+                 provenance="summary")
+    services = []
+    for i in range(N_SITES):
+        # host_suspend_time models paper-era per-host blacklisting (same
+        # order as the DRP idle timeout): after 2 consecutive failures a
+        # host sits out 300 s.  Under a site-wide intermittent fault this
+        # is the failure mode the monitor exists for — hosts die off one
+        # by one while the service keeps accepting work, so queued tasks
+        # are trapped behind suspended hosts until the drain revokes them.
+        svc = FalkonService(clock, FalkonConfig(
+            host_suspend_time=300.0,
+            drp=DRPConfig(max_executors=CAP, alloc_latency=0.0,
+                          alloc_chunk=CAP)), name=f"site{i}")
+        svc.provision(CAP)
+        eng.add_site(f"site{i}", FalkonProvider(svc), capacity=CAP)
+        services.append(svc)
+    hm = None
+    if monitored:
+        hm = HealthMonitor(clock, MONITOR_CFG, tracer=tracer)
+        hm.watch(eng)
+        for svc in services:
+            hm.watch_service(svc)
+        if stream_path:
+            hm.attach_sink(stream_path)
+
+    # per-completion timestamps (successes only) — the makespan comes from
+    # the last resolution, not clock.now(), which runs past the workload
+    # on monitor probe/poke events
+    done_t: list[float] = []
+    failed = [0]
+
+    def record(fut, _append=done_t.append, _clock=clock):
+        if fut.resolved:
+            _append(_clock.now())
+        else:
+            failed[0] += 1
+
+    t0 = time.monotonic()
+    for i in range(n):
+        eng.submit(f"t{i}", None, duration=JOB_S).on_done(record)
+    eng.run()
+    wall = time.monotonic() - t0
+    if hm is not None:
+        hm.emit_line()          # final stream line at end of run
+        hm.close()
+
+    makespan = max(done_t)
+    post = sum(1 for t in done_t if t >= t_fault)
+    degraded_s = makespan - t_fault
+    res = {
+        "monitored": monitored,
+        "tasks": n,
+        "completed": len(done_t),
+        "failed_permanently": failed[0],
+        "t_fault": round(t_fault, 3),
+        "makespan_s": round(makespan, 3),
+        "degraded_interval_s": round(degraded_s, 3),
+        "post_fault_tasks": post,
+        "post_fault_tasks_per_s": round(post / degraded_s, 3),
+        "revoked": eng.stats().get("revoked", 0),
+        "wall_s": round(wall, 3),
+    }
+    if hm is not None:
+        res["transition_log"] = hm.transition_log_json()
+        res["transitions"] = list(hm.transitions)
+        res["states"] = hm.states()
+        res["stream_lines"] = hm.lines_emitted
+    return res
+
+
+def run() -> list[dict]:
+    n = int(os.environ.get("HEALTH_RECOVERY_TASKS", "20000"))
+    stream_path = os.path.join(RESULTS_DIR, "health_recovery_stream.jsonl")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+
+    blind = run_once(n, monitored=False)
+    mon = run_once(n, monitored=True, stream_path=stream_path)
+    replay = run_once(n, monitored=True)
+
+    # determinism: same seed, same workload -> byte-identical health log
+    assert mon["transition_log"] == replay["transition_log"], \
+        "monitored replay diverged"
+
+    # reaction time: the failing site must be blacklisted within one
+    # rolling window of fault onset
+    t_fault = mon["t_fault"]
+    bl = [tr["t"] for tr in mon["transitions"]
+          if tr["site"] == FAIL_SITE and tr["to"] == "blacklisted"]
+    assert bl, f"{FAIL_SITE} never blacklisted: {mon['transitions']}"
+    reaction_s = bl[0] - t_fault
+    assert reaction_s <= MONITOR_CFG.window, \
+        f"blacklist took {reaction_s:.1f}s (> window {MONITOR_CFG.window}s)"
+    assert mon["states"][FAIL_SITE] == "blacklisted"
+
+    # recovery: monitored throughput over the degraded interval
+    ratio = (mon["post_fault_tasks_per_s"]
+             / blind["post_fault_tasks_per_s"])
+    assert ratio >= 1.5, \
+        f"recovery ratio {ratio:.2f}x < 1.5x (mon={mon}, blind={blind})"
+
+    # the emitted stream is schema-valid
+    from tools.trace_view import validate_metrics_stream
+    with open(stream_path, encoding="utf-8") as f:
+        errors = validate_metrics_stream(f.readlines())
+    assert not errors, errors
+
+    payload = {
+        "tasks": n,
+        "t_fault_s": t_fault,
+        "fail_site": FAIL_SITE,
+        "fail_p": FAIL_P,
+        "fail_latency_s": FAIL_LATENCY,
+        "recovery_ratio": round(ratio, 3),
+        "blacklist_reaction_s": round(reaction_s, 3),
+        "window_s": MONITOR_CFG.window,
+        "blind": {k: v for k, v in blind.items() if k != "transitions"},
+        "monitored": {k: v for k, v in mon.items()
+                      if k not in ("transitions", "transition_log")},
+        "transitions": mon["transitions"],
+        "stream_path": os.path.basename(stream_path),
+    }
+    save_json("health_recovery", payload)
+
+    return [{
+        "name": f"health_recovery.{n // 1000}k",
+        "us_per_call": 1e6 * mon["wall_s"] / n,
+        "derived": (f"{ratio:.2f}x recovery (mon "
+                    f"{mon['post_fault_tasks_per_s']:.1f} t/s vs blind "
+                    f"{blind['post_fault_tasks_per_s']:.1f} t/s); "
+                    f"blacklisted {FAIL_SITE} in {reaction_s:.1f}s; "
+                    f"{mon['revoked']} revoked; "
+                    f"{mon['stream_lines']} stream lines"),
+    }]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']}: {row['derived']}")

@@ -6,9 +6,12 @@ Two claims are gated here:
     default 1-in-16 sampling) stays within 5% of untraced throughput —
     the hot-path contract is one ``is not None`` test per hook with no
     tracer, and a counter bump plus O(1) critical-path update per
-    non-sampled task with one.  Measured interleaved best-of-N so the
-    assertion is robust to CI timer noise; ``OBS_OVERHEAD_TASKS`` scales
-    the task count (default 100,000).
+    non-sampled task with one.  The same gate covers a tracer + health
+    monitor run (DESIGN.md §13: one dict probe, strided turnaround
+    sampling, counter-delta error windows off the completion path).
+    Measured best-of-N across fresh interpreters so the assertion is
+    robust to per-process layout bias as well as timer noise;
+    ``OBS_OVERHEAD_TASKS`` scales the task count (default 100,000).
   * **Boundedness**: the traced run's span store, event logs, and stage
     table all stay within their caps regardless of task count.
 
@@ -33,15 +36,25 @@ from benchmarks.common import (RESULTS_DIR, attach_observability,
                                falkon_engine, fmri_workflow, save_json)
 from benchmarks.million_tasks import build_workload
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def _measure_once(n_tasks: int, traced: bool) -> tuple[float, object]:
+
+def _measure_once(n_tasks: int, traced: bool,
+                  monitored: bool = False) -> tuple[float, object]:
     """One untimed-build + timed-run of the MolDyn-shaped workload;
-    returns (run wall seconds, tracer or None)."""
+    returns (run wall seconds, tracer or None).  With ``monitored`` a
+    `HealthMonitor` watches the engine and service on top of the tracer
+    (no sink, no faults — the hot-path hook cost is what's measured)."""
     eng, svc = falkon_engine(executors=512, alloc_latency=81.0,
                              engine_kwargs={"provenance": "summary"})
     tracer = None
     if traced:
         tracer, _registry = attach_observability(eng, services=[svc])
+    if monitored:
+        from repro.core import HealthMonitor
+        hm = HealthMonitor(eng.clock, tracer=tracer)
+        hm.watch(eng)
+        hm.watch_service(svc)
     n, out = build_workload(eng, n_tasks, job_s=168.0)
     # the comparison measures the tracing hooks, not collector scheduling:
     # without this, the previous run's graph teardown lands as cycle-GC
@@ -60,32 +73,63 @@ def _measure_once(n_tasks: int, traced: bool) -> tuple[float, object]:
     return wall, tracer
 
 
-def measure_overhead(n_tasks: int, repeats: int = 4) -> dict:
-    """Paired traced-vs-untraced comparison, `repeats` rounds.
+_MODES = (("off", False, False), ("traced", True, False),
+          ("monitored", True, True))
 
-    Machine noise here (CPU frequency, cache pressure from the growing
-    heap) is several times the effect being measured, but it drifts
-    slowly — so each round runs both modes back to back and takes their
-    *ratio*, which cancels the shared drift; the in-round ordering bias
-    alternates sign round to round.  The gate uses the minimum round
-    ratio: deterministic hook cost is a floor under every round, so the
-    cleanest round is the accurate one (the classic min-wall estimator,
-    applied to ratios)."""
-    best = {False: float("inf"), True: float("inf")}
-    tracer = None
-    rounds = []
-    for rep in range(repeats):
-        order = (False, True) if rep % 2 == 0 else (True, False)
-        walls = {}
-        for traced in order:
-            walls[traced], tr = _measure_once(n_tasks, traced)
-            if walls[traced] < best[traced]:
-                best[traced] = walls[traced]
-            if tr is not None:
-                tracer = tr
-        rounds.append(walls[True] / walls[False] - 1.0)
 
-    # boundedness: caps hold no matter the task count
+def _measure_subprocess(n_tasks: int, rounds: int, flip: bool) -> None:
+    """``--measure`` child entry point: run all three modes back to back
+    `rounds` times in this fresh interpreter and print one JSON line
+    mapping each mode to its best wall."""
+    best = {name: float("inf") for name, _, _ in _MODES}
+    for rep in range(rounds):
+        order = _MODES if (rep % 2 == 0) != flip else _MODES[::-1]
+        for name, traced, monitored in order:
+            wall, _tr = _measure_once(n_tasks, traced, monitored)
+            best[name] = min(best[name], wall)
+    print(json.dumps({m: round(w, 6) for m, w in best.items()}))
+
+
+def measure_overhead(n_tasks: int, procs: int = 6,
+                     rounds: int = 2) -> dict:
+    """Min paired ratio across fresh interpreters.
+
+    Two noise sources here each dwarf the few-% effect being gated, and
+    they need different cures.  Machine speed is bursty over tens of
+    seconds, so modes are only comparable when run back to back — each
+    subprocess runs all three modes paired (alternating order to cancel
+    in-pair drift) and contributes one ratio per comparison.  Code/heap
+    layout and the hash seed are fixed per interpreter and their bias is
+    *mode-specific* — one process can run the monitored loop 10-15% slow
+    across every in-process round — so ratios from a single process are
+    one draw of that bias; `procs` fresh interpreters redraw it, and the
+    gate takes the minimum paired ratio.  Deterministic hook cost is a
+    floor under every draw, so the cleanest draw is the accurate one
+    (the classic min-wall estimator, applied to paired ratios)."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([
+        os.path.join(_ROOT, "src"), _ROOT,
+        env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    ratios: dict[str, list] = {"traced": [], "monitored": []}
+    walls: dict[str, list] = {name: [] for name, _, _ in _MODES}
+    for k in range(procs):
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.observability",
+             "--measure", str(n_tasks), str(rounds), str(k % 2)],
+            capture_output=True, text=True, env=env, cwd=_ROOT,
+            check=True)
+        best = json.loads(out.stdout.strip().splitlines()[-1])
+        for name in walls:
+            walls[name].append(best[name])
+        ratios["traced"].append(best["traced"] / best["off"] - 1.0)
+        ratios["monitored"].append(best["monitored"] / best["off"] - 1.0)
+
+    # boundedness: caps hold no matter the task count (one in-process
+    # traced run just for the snapshot — its wall is not part of the gate)
+    _wall, tracer = _measure_once(n_tasks, traced=True)
     snap = tracer.snapshot()
     assert snap["sampled_spans"] <= tracer.max_spans
     assert all(len(lg) <= lg.cap for lg in tracer.events.values())
@@ -94,10 +138,16 @@ def measure_overhead(n_tasks: int, repeats: int = 4) -> dict:
 
     return {
         "tasks": n_tasks,
-        "untraced_s": round(best[False], 3),
-        "traced_s": round(best[True], 3),
-        "overhead_pct": round(100.0 * min(rounds), 2),
-        "round_overheads_pct": [round(100.0 * r, 2) for r in rounds],
+        "untraced_s": round(min(walls["off"]), 3),
+        "traced_s": round(min(walls["traced"]), 3),
+        "monitored_s": round(min(walls["monitored"]), 3),
+        "overhead_pct": round(100.0 * min(ratios["traced"]), 2),
+        "monitored_overhead_pct": round(
+            100.0 * min(ratios["monitored"]), 2),
+        "proc_overheads_pct": [round(100.0 * r, 2)
+                               for r in ratios["traced"]],
+        "proc_monitored_pct": [round(100.0 * r, 2)
+                               for r in ratios["monitored"]],
         "sampled_spans": snap["sampled_spans"],
         "sample_stride": snap["sample_stride"],
         "max_spans": tracer.max_spans,
@@ -141,8 +191,10 @@ def write_sample_trace(path: str | None = None) -> str:
 def run() -> list[dict]:
     n_tasks = int(os.environ.get("OBS_OVERHEAD_TASKS", "100000"))
     r = measure_overhead(n_tasks)
-    # acceptance gate: <= 5% throughput cost (best paired round)
+    # acceptance gates: <= 5% throughput cost (best paired round), both
+    # for the tracer alone and for tracer + health monitor (DESIGN.md §13)
     assert r["overhead_pct"] <= 5.0, r
+    assert r["monitored_overhead_pct"] <= 5.0, r
 
     sample_path = write_sample_trace()
     trace, report = build_sample_trace()
@@ -151,8 +203,9 @@ def run() -> list[dict]:
     rows = [{
         "name": f"observability.overhead.{n_tasks // 1000}k",
         "us_per_call": 1e6 * r["traced_s"] / r["tasks"],
-        "derived": (f"{r['overhead_pct']:+.1f}% traced vs untraced "
-                    f"({r['sampled_spans']} spans kept, "
+        "derived": (f"{r['overhead_pct']:+.1f}% traced, "
+                    f"{r['monitored_overhead_pct']:+.1f}% monitored vs "
+                    f"untraced ({r['sampled_spans']} spans kept, "
                     f"stride {r['sample_stride']})"),
     }, {
         "name": "observability.sample_trace",
@@ -167,5 +220,11 @@ def run() -> list[dict]:
 
 
 if __name__ == "__main__":
-    for row in run():
-        print(f"{row['name']}: {row['derived']}")
+    import sys
+
+    if len(sys.argv) > 1 and sys.argv[1] == "--measure":
+        _measure_subprocess(int(sys.argv[2]), int(sys.argv[3]),
+                            sys.argv[4] == "1")
+    else:
+        for row in run():
+            print(f"{row['name']}: {row['derived']}")

@@ -39,6 +39,7 @@ MODULES = [
     "benchmarks.streaming_expansion",  # §9: windowed graph construction
     "benchmarks.real_throughput",      # §10: real threads, Fig-6 shape
     "benchmarks.observability",        # §12: tracing overhead + sample trace
+    "benchmarks.health_recovery",      # §13: monitored recovery vs blind
 ]
 
 

@@ -26,6 +26,8 @@ from repro.core.federation import (FederatedEngine, Mailbox,
 from repro.core.faults import FaultInjector, RetryPolicy, TaskFailure
 from repro.core.futures import (CompletionCounter, DataFuture, resolved,
                                 when_all)
+from repro.core.health import (METRICS_STREAM_SCHEMA, HealthConfig,
+                               HealthMonitor, RollingStat)
 from repro.core.metrics import StreamStat
 from repro.core.observability import (BoundedLog, MetricsRegistry, RunReport,
                                       Span, Tracer, build_report)
@@ -57,6 +59,7 @@ __all__ = [
     "VDC", "InvocationRecord", "LoadBalancer", "Site", "StreamStat",
     "Tracer", "Span", "BoundedLog", "MetricsRegistry", "RunReport",
     "build_report",
+    "HealthMonitor", "HealthConfig", "RollingStat",
     "DataLayer", "DataObject", "SharedStore", "ExecutorCache",
     "StagingCostModel", "EvictionPolicy", "LRUPolicy", "LFUPolicy",
     "SizeAwarePolicy", "ShardDirectory",

@@ -223,11 +223,16 @@ class DeviceExecutorPool:
         self.fused_tasks += n_fused
         if self.tracer is not None and n_fused:
             self.tracer.event("bundle_fused", now, n_fused)
+        tr = self.tracer
         for (task, done, _stage), (ok, v, err), io_s, run_s in zip(
                 bundle, out, io_ss, run_ss):
             self.tasks_run += 1
             self.io_stat.observe(now, io_s)
             self.run_stat.observe(now, run_s)
+            if tr is not None and not ok:
+                # worker-level failure signal (DESIGN.md §13), same kind
+                # the thread/process pools emit
+                tr.event("worker_error", now)
             done(ok, v, err, io_s, run_s)
 
     def metrics(self) -> dict:

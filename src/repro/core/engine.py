@@ -147,6 +147,11 @@ class Engine:
         # and every k-th task a full span; None keeps each hook to a
         # single attribute test.
         self.tracer = tracer
+        # online health (DESIGN.md §13): set by `HealthMonitor.watch` —
+        # dispatch/completion hooks feed its rolling windows and its state
+        # machine drives `Site.suspended_until`/`Site.derate`.  None keeps
+        # each hook to a single attribute test.
+        self.health = None
         self.retry_policy = retry_policy or RetryPolicy()
         self.vdc = vdc or VDC()
         self.restart_log = restart_log
@@ -164,6 +169,7 @@ class Engine:
         self.tasks_completed = 0
         self.tasks_failed = 0
         self.tasks_restored = 0
+        self.tasks_revoked = 0   # drain revocations re-placed (§13)
         # per-site submission throttle (Swift holds excess ready tasks and
         # feeds sites as they turn jobs around, letting responsiveness
         # scores steer the split — paper §3.13)
@@ -274,8 +280,15 @@ class Engine:
             inj = self.fault_injector
 
             def chk(t):
-                inj.check(t.name, t.host, t.attempt)
+                s = t.site
+                inj.check(t.name, t.host, t.attempt,
+                          s.name if s is not None else "")
 
+            if getattr(inj, "timed", False):
+                # fail-slow rules: the Falkon sim path pre-evaluates the
+                # check at dispatch so TaskFailure.latency can set the
+                # failed attempt's service time
+                chk.timed = True
             task.fault_check = chk
         self.tasks_submitted += 1
         # dependency scan without per-task garbage: at frontier scale
@@ -447,6 +460,16 @@ class Engine:
         if self.balancer.duration_aware:
             site.outstanding_work += sim_duration(task)
         site.stats.submitted += 1
+        h = self.health
+        if h is not None:
+            # before provider.submit: a provider may complete synchronously
+            # and the monitor must see dispatch before finish (inlined
+            # HealthMonitor.task_dispatched — §13 hot-path contract)
+            if not h._armed:
+                h.arm()
+            r = h._running
+            if len(r) < h._track_cap:
+                r.append(task)
         site.provider.submit(
             task, lambda ok, v, e: self._done(task, ok, v, e))
         return True
@@ -493,6 +516,16 @@ class Engine:
         if ok:
             site.on_success(now - task.submit_time)
             self.tasks_completed += 1
+            h = self.health
+            if h is not None:
+                # inlined HealthMonitor.task_finished (§13 hot-path
+                # contract): error windows come from Site.stats counter
+                # deltas on the monitor's tick, and the straggler registry
+                # self-prunes — a success pays only the sampling stride
+                if h._dur_skip:
+                    h._dur_skip -= 1
+                else:
+                    h.sample_turnaround(task, site, now)
             self._record(task, "ok")
             if self.restart_log is not None and task.durable:
                 self.restart_log.append(task.key, value)
@@ -514,7 +547,21 @@ class Engine:
             task.output.set(value)     # upstream futures (DESIGN.md §9)
             return
         # failure path (§3.12)
+        if getattr(err, "kind", None) == "revoked":
+            # administrative drain revocation (DESIGN.md §13): a drained
+            # service handed the still-queued task back — re-place it on
+            # another site without charging a retry or denting the score
+            self.tasks_revoked += 1
+            if self.health is not None:
+                self.health.task_revoked(task)
+            if self.tracer is not None:
+                self.tracer.event("revoked", now)
+            self._dispatch(task, exclude_site=site.name)
+            return
         site.on_failure()
+        # no monitor hook on failure: error windows come from Site.stats
+        # counter deltas, and the straggler registry entry (if any) tracks
+        # the live task across its retries (HealthMonitor.task_finished)
         failures = task.site_failures
         if failures is None:
             failures = task.site_failures = {}
@@ -560,6 +607,16 @@ class Engine:
             args_repr="", outputs=[task.output.name], error=error,
             span_id=sp.span_id if sp is not None else ""))
 
+    def poke(self) -> None:
+        """Schedule a pending-queue drain pass.  Completions trigger drains
+        on their own; this exists for *external* capacity changes — the
+        health monitor calls it when a site suspension lapses (the
+        recovery probe), since with every site suspended no completion
+        would ever arrive to unwedge the held backlog."""
+        if self._pending and not self._drain_scheduled:
+            self._drain_scheduled = True
+            self.clock.schedule(0.0, self._drain_pending)
+
     # ------------------------------------------------------------------
     def run(self):
         self.clock.run()
@@ -570,5 +627,6 @@ class Engine:
             "completed": self.tasks_completed,
             "failed": self.tasks_failed,
             "restored_from_log": self.tasks_restored,
+            "revoked": self.tasks_revoked,
             "makespan": self.clock.now(),
         }

@@ -25,6 +25,7 @@ import dataclasses
 from collections import deque
 from typing import Callable, Optional
 
+from repro.core.faults import TaskFailure
 from repro.core.metrics import StreamStat
 from repro.core.observability import BoundedLog, Tracer
 from repro.core.simclock import Clock
@@ -133,6 +134,10 @@ class FalkonService:
         # task bodies run on its workers and completions re-enter through
         # the clock's post queue; None keeps the simulated path byte-for-byte
         self.pool = pool
+        # online health (DESIGN.md §13): set by `HealthMonitor.watch_service`
+        # — per-executor completions feed its windows and its site drain
+        # calls `drain_queued`.  None keeps `_complete` to one attribute test.
+        self.health = None
         self.queue: deque = deque()
         self.executors: list[Executor] = []
         self._idle: deque = deque()   # O(1) dispatch: idle-executor pool
@@ -366,10 +371,38 @@ class FalkonService:
         start = self.clock.now() + overhead
         task.start_time = start
         task.host = e.host
+        chk = task.fault_check
+        if chk is not None and getattr(chk, "timed", False):
+            # fail-slow faults (DESIGN.md §13): the injector carries rules
+            # whose failures have their own latency (hang/timeout style),
+            # so the check runs at dispatch — a hit occupies the executor
+            # for the *fault's* duration, not the task's
+            fault = None
+            try:
+                chk(task)
+            except BaseException as f:  # noqa: BLE001
+                fault = f
+            if fault is not None:
+                dur = getattr(fault, "latency", None)
+                if dur is None:
+                    dur = sim_duration(task)
+                self.clock.schedule(
+                    overhead + io + dur,
+                    lambda: self._complete(e, task, False, None, fault,
+                                           start))
+                return
 
-        def finish():
-            ok, value, err = execute_task(task)
-            self._complete(e, task, ok, value, err, start)
+            def finish():
+                # the dispatch-time draw already passed: mask the check so
+                # completion doesn't draw (and possibly fail) a second time
+                task.fault_check = None
+                ok, value, err = execute_task(task)
+                task.fault_check = chk
+                self._complete(e, task, ok, value, err, start)
+        else:
+            def finish():
+                ok, value, err = execute_task(task)
+                self._complete(e, task, ok, value, err, start)
 
         self.clock.schedule(overhead + io + sim_duration(task), finish)
 
@@ -433,6 +466,11 @@ class FalkonService:
                 # paper §3.12: suspend faulty host, reschedule elsewhere
                 e.suspended_until = end + self.cfg.host_suspend_time
                 e.consec_failures = 0
+        if self.health is not None:
+            # per-executor windowed error rates (DESIGN.md §13); the
+            # monitor may extend `suspended_until` beyond the
+            # consecutive-failure heuristic above
+            self.health.on_executor(self, e, ok, end)
         next_local = None
         if e.local_q and end < e.suspended_until:
             # suspended host: hand its affinity queue back to the
@@ -458,6 +496,29 @@ class FalkonService:
         callback(ok, value, err)
         self._maybe_shrink()
         self._pump()
+
+    def drain_queued(self) -> int:
+        """Revoke every queued-but-not-running task (global queue plus
+        executor affinity queues) back to its submitter with
+        ``TaskFailure(kind="revoked")`` — the engine re-places revoked
+        tasks on other sites without charging retries (DESIGN.md §13).
+        Tasks already running on executors finish (or fail) normally.
+        Called by the `HealthMonitor` when it drains this service's site;
+        returns the number of tasks revoked."""
+        out = list(self.queue)
+        self.queue.clear()
+        for e in self.executors:
+            if e.local_q:
+                self._parked -= len(e.local_q)
+                out.extend(e.local_q)
+                e.local_q.clear()
+                e.local_work = 0.0
+        for task in out:
+            callback = task._falkon_done
+            task._falkon_done = None
+            callback(False, None,
+                     TaskFailure(f"{self.name} drained", kind="revoked"))
+        return len(out)
 
     def shutdown(self) -> None:
         """Stop the attached worker pool, if any (no-op on the simulated

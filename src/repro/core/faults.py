@@ -5,6 +5,17 @@
   `host_fail_threshold` consecutive failures ("stale NFS handle" pattern)
 * site faults: after `site_fail_threshold` failures at a site, the task is
   handed back for rescheduling at a *different* site
+* revocations: ``kind="revoked"`` marks an administrative requeue (a
+  drained service handing queued tasks back, DESIGN.md §13) — the engine
+  re-places the task elsewhere without charging a retry or denting the
+  site score
+
+Site-correlated, time-windowed scenarios (`fail_site_window`) model the
+paper's operational reality — a whole site going bad mid-campaign — and
+drive the health-monitor benchmark.  A rule with ``latency=`` models
+fail-slow faults (hangs/timeouts): the failed attempt occupies its
+executor for `latency` seconds instead of the task's nominal duration
+(the Falkon sim path evaluates such rules at dispatch time).
 """
 from __future__ import annotations
 
@@ -16,14 +27,20 @@ from typing import Callable
 class TaskFailure(Exception):
     """A task-body failure carrying its fault class (paper §3.12):
     ``kind`` is ``"transient"`` (retried in place), ``"host"`` (counts
-    toward executor suspension), or ``"site"`` (rescheduled at a different
-    site).  Raise it from a task body — or let any other exception map to
-    transient — e.g. ``raise TaskFailure("stale NFS handle", kind="host")``.
-    """
+    toward executor suspension), ``"site"`` (rescheduled at a different
+    site), or ``"revoked"`` (administrative drain requeue — no retry
+    charge).  Raise it from a task body — or let any other exception map
+    to transient — e.g. ``raise TaskFailure("stale NFS", kind="host")``.
+    ``latency`` (optional) is the seconds the failing attempt holds its
+    executor before the failure surfaces — fail-slow/timeout faults; the
+    simulated Falkon path honors it when the rule is evaluated at
+    dispatch time."""
 
-    def __init__(self, msg: str, kind: str = "transient"):
+    def __init__(self, msg: str, kind: str = "transient",
+                 latency: float | None = None):
         super().__init__(msg)
-        self.kind = kind  # transient | host | site
+        self.kind = kind  # transient | host | site | revoked
+        self.latency = latency
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,11 +53,22 @@ class RetryPolicy:
 
 
 class FaultInjector:
-    """Deterministic failure injection for tests/benchmarks."""
+    """Deterministic failure injection for tests/benchmarks.
 
-    def __init__(self, seed: int = 0):
+    Rules are callables ``rule(task_name, host, attempt) -> TaskFailure |
+    None``; a rule carrying ``wants_site = True`` is additionally passed
+    the site name (``rule(task_name, host, attempt, site)``), which is how
+    site-correlated scenarios match tasks dispatched through providers
+    that never set a host.  Time-windowed rules need the run's clock —
+    pass ``clock=`` (or set ``inj.clock``) before registering one."""
+
+    def __init__(self, seed: int = 0, clock=None):
         self.rng = random.Random(seed)
         self.rules: list[Callable] = []
+        self.clock = clock
+        # True once any registered rule wants dispatch-time (fail-slow)
+        # evaluation; the engine copies this onto the per-task fault check
+        self.timed = False
 
     def fail_probability(self, p: float, kind: str = "transient",
                          only_task: str | None = None):
@@ -75,8 +103,51 @@ class FaultInjector:
         self.rules.append(rule)
         return self
 
-    def check(self, task_name: str, host: str, attempt: int):
+    def fail_site_window(self, site: str, p: float,
+                         start: float = 0.0, end: float = float("inf"),
+                         kind: str = "transient",
+                         latency: float | None = None,
+                         only_task: str | None = None):
+        """Site-correlated, time-windowed fault scenario: tasks attempted
+        at `site` between clock times ``[start, end)`` fail with
+        probability `p`.  ``latency=`` makes them fail-slow (the attempt
+        occupies its executor that long before failing — the simulated
+        Falkon path evaluates such rules at dispatch time, so the window
+        applies to attempt *start*).  Matches the site name passed by the
+        engine, or a ``{site}-host*`` host prefix for direct callers.
+        Requires a bound clock."""
+        if self.clock is None:
+            raise ValueError("fail_site_window needs a clock: "
+                             "FaultInjector(seed, clock=clock)")
+        clock = self.clock
+        prefix = site + "-host"
+
+        def rule(task_name: str, host: str, attempt: int,
+                 task_site: str = ""):
+            if task_site != site and not host.startswith(prefix):
+                return None
+            if only_task and only_task not in task_name:
+                return None
+            now = clock.now()
+            if not (start <= now < end):
+                return None
+            if self.rng.random() < p:
+                return TaskFailure(f"injected {kind} fault at {site}",
+                                   kind, latency=latency)
+            return None
+
+        rule.wants_site = True
+        if latency is not None:
+            self.timed = True
+        self.rules.append(rule)
+        return self
+
+    def check(self, task_name: str, host: str, attempt: int,
+              site: str = ""):
         for rule in self.rules:
-            err = rule(task_name, host, attempt)
+            if getattr(rule, "wants_site", False):
+                err = rule(task_name, host, attempt, site)
+            else:
+                err = rule(task_name, host, attempt)
             if err is not None:
                 raise err

@@ -290,6 +290,13 @@ class WorkStealer:
     (held in the victim shard but not the thief's -> restage bytes) and
     reported through a bounded `StreamStat` — an O(inputs) lookup per
     migrated task, no executor or task scans.
+
+    Health interplay (DESIGN.md §13): a drained/blacklisted shard is never
+    a thief — thief eligibility requires `LoadBalancer.idle_slots` > 0 and
+    that already skips suspended sites.  It *is* the natural victim: its
+    unplaceable ready work accumulates in `_pending` (via `notify_backlog`)
+    and migrates to healthy shards, which is how the federation routes
+    around a bad shard with no health-specific code here.
     """
 
     def __init__(self, clock: Clock, min_batch: int = 2,
@@ -478,6 +485,10 @@ class FederatedEngine:
         # land as component events, and the clock's deterministic event
         # order keeps the merged stream reproducible under SimClock
         self.tracer = tracer
+        # online health (DESIGN.md §13): set by `HealthMonitor.watch(fed)`,
+        # which also watches every shard engine; drained shards then stop
+        # being steal thieves via the suspended-site seam in `idle_slots`
+        self.health = None
         if isinstance(shards, int):
             if shards < 1:
                 raise ValueError("need at least one shard")
@@ -697,4 +708,6 @@ class FederatedEngine:
             m["stealer"] = self.stealer.metrics()
         if self.data_layer is not None:
             m["data"] = self.data_layer.metrics()
+        if self.health is not None:
+            m["health"] = self.health.states()
         return m

@@ -48,6 +48,7 @@ from __future__ import annotations
 import json
 from typing import Any, Callable, Optional
 
+from repro.core.health import RollingStat
 from repro.core.metrics import StreamStat, percentile_of
 
 __all__ = [
@@ -197,7 +198,8 @@ class Tracer:
     """
 
     def __init__(self, sample_every: int = 1, max_spans: int = 4096,
-                 event_cap: int = 1024, log_cap: int = 2048):
+                 event_cap: int = 1024, log_cap: int = 2048,
+                 rate_window: float = 60.0, rate_buckets: int = 12):
         if sample_every < 1:
             raise ValueError("sample_every must be >= 1")
         if max_spans < 2:
@@ -206,6 +208,17 @@ class Tracer:
         self.max_spans = max_spans
         self.event_cap = event_cap
         self.log_cap = log_cap
+        # windowed per-kind event rates (DESIGN.md §13): `event_counts`
+        # only gives cumulative totals, so two snapshots had to be diffed
+        # by hand to see a rate; each kind also feeds a `RollingStat`
+        self.rate_window = rate_window
+        self.rate_buckets = rate_buckets
+        self._event_rates: dict[str, RollingStat] = {}
+        self._last_event_t = 0.0
+        # event-stream subscribers (`subscribe`): called per event as
+        # fn(kind, t, value).  Tuple, not list — the hot path iterates it
+        # and the empty-tuple check is one truthiness test.
+        self._subs: tuple = ()
         # exact counters (every task, sampled or not)
         self.tasks_seen = 0
         self.tasks_done = 0
@@ -330,17 +343,34 @@ class Tracer:
             self._k = self.sample_every * self._stride
 
     # -- component events -----------------------------------------------
+    def subscribe(self, fn: Callable[[str, float, float], None]) -> None:
+        """Register an event-stream listener, called synchronously as
+        ``fn(kind, t, value)`` for every `event` — the `HealthMonitor`
+        subscribes here to fold component events into its windowed
+        alerts.  Listeners must not block (they run on the clock thread)."""
+        self._subs = self._subs + (fn,)
+
     def event(self, kind: str, t: float, value: float = 1.0) -> None:
         """Record one component event (``drp_alloc``, ``affinity_park``,
         ``mailbox_flush``, ``steal``, ``bundle_fused``, ``stage_bytes``,
-        ...): exact count/total per kind plus a bounded (t, value) log."""
+        ...): exact count/total per kind, a bounded (t, value) log, and a
+        rolling windowed rate (`event_rates`).  Subscribers see every
+        event."""
         agg = self._event_agg.get(kind)
         if agg is None:
             self._event_agg[kind] = agg = [0, 0.0]
             self.events[kind] = BoundedLog(self.event_cap)
+            self._event_rates[kind] = RollingStat(self.rate_window,
+                                                  self.rate_buckets)
         agg[0] += 1
         agg[1] += value
         self.events[kind].append((t, value))
+        self._event_rates[kind].observe(t, value)
+        if t > self._last_event_t:
+            self._last_event_t = t
+        if self._subs:
+            for fn in self._subs:
+                fn(kind, t, value)
 
     def exec_span(self, site: str, host: str, start: float, end: float,
                   name: str = "") -> None:
@@ -352,6 +382,23 @@ class Tracer:
     def event_counts(self) -> dict:
         return {k: {"count": a[0], "total": a[1]}
                 for k, a in sorted(self._event_agg.items())}
+
+    def event_rates(self, now: float | None = None) -> dict:
+        """Windowed per-kind event rates over the trailing `rate_window`
+        seconds (the satellite to `event_counts`' cumulative totals).
+        `now` defaults to the newest event timestamp seen — callers with a
+        clock should pass its now() so stale kinds decay to zero."""
+        if now is None:
+            now = self._last_event_t
+        w = self.rate_window
+        out = {}
+        for kind in sorted(self._event_rates):
+            rs = self._event_rates[kind]
+            c = rs.count(now)
+            out[kind] = {"window_s": w, "count": c,
+                         "rate_per_s": c / w,
+                         "value_per_s": rs.total(now) / w}
+        return out
 
     def stage_breakdown(self) -> dict:
         """Per-stage estimated totals: task count, run seconds, queue-wait
@@ -382,6 +429,7 @@ class Tracer:
             "open_spans": self._open_spans,
             "sample_stride": self.sample_every * self._stride,
             "events": self.event_counts(),
+            "event_rates": self.event_rates(),
         }
 
     # -- chrome trace export --------------------------------------------
@@ -465,7 +513,7 @@ class Tracer:
             "displayTimeUnit": "ms",
             "otherData": {"schema": "repro.chrome_trace/v1",
                           **{k: v for k, v in self.snapshot().items()
-                             if k != "events"}},
+                             if k not in ("events", "event_rates")}},
         }
         if path is not None:
             with open(path, "w", encoding="utf-8") as f:

@@ -184,6 +184,11 @@ class ThreadExecutorPool:
         self.run_stat.observe(now, run_s)
         if self.tracer is not None:
             self.tracer.event("worker_task", now, run_s)
+            if not ok:
+                # worker-level failure signal (DESIGN.md §13): the health
+                # monitor's event subscription sees pool errors even before
+                # the engine's completion path classifies them
+                self.tracer.event("worker_error", now)
         done(ok, value, err, io_s, run_s)
 
     def metrics(self) -> dict:
@@ -328,6 +333,11 @@ class ProcessExecutorPool:
         self.run_stat.observe(now, run_s)
         if self.tracer is not None:
             self.tracer.event("worker_task", now, run_s)
+            if not ok:
+                # worker-level failure signal (DESIGN.md §13): the health
+                # monitor's event subscription sees pool errors even before
+                # the engine's completion path classifies them
+                self.tracer.event("worker_error", now)
         done(ok, value, err, io_s, run_s)
 
     def metrics(self) -> dict:

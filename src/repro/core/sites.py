@@ -56,7 +56,18 @@ class Site:
         # compute *before* running it; stays 0.0 otherwise
         self.outstanding_work = 0.0
         self.stats = SiteStats()
+        # drain/blacklist seam (DESIGN.md §13): `pick` and `idle_slots`
+        # skip a site while now < suspended_until.  The engine's retry
+        # path sets it for fixed backoffs; a `HealthMonitor` drives it
+        # from observed windowed error rates.
         self.suspended_until = 0.0
+        # degraded-state weight multiplier, set by the health monitor
+        # (1.0 = no effect; `pick` multiplies it into the site weight)
+        self.derate = 1.0
+        # monitor-maintained label ("healthy" | "degraded" | "drained" |
+        # "blacklisted") — informational; scheduling reads only
+        # `suspended_until` and `derate`
+        self.health_state = "healthy"
 
     # -- paper: score up on success, down on exceptions ---------------------
     def on_success(self, turnaround: float):
@@ -152,7 +163,10 @@ class LoadBalancer:
             # so a site holding few-but-long tasks yields to one holding
             # many-but-tiny tasks when the predictions say it should
             load = s.outstanding + (s.outstanding_work if dur else 0.0)
-            w = s.score * s.capacity / (1.0 + load)
+            # `derate` folds the health monitor's degraded state into the
+            # weight (1.0 when healthy — multiplication is exact identity,
+            # so a monitor-less run is byte-identical)
+            w = s.score * s.derate * s.capacity / (1.0 + load)
             if aff:
                 dl = aff.get(s.name)
                 if dl is not None:

@@ -1,0 +1,604 @@
+"""Unit tests for the online health layer (DESIGN.md §13):
+
+  * RollingStat — windowed counts/means/percentiles, bucket expiry,
+    bulk counter-delta folding, stale-observation drop;
+  * HealthMonitor state machine — degrade/recover, drain -> blacklist
+    with queued-task revocation, probe-based recovery, replay-identical
+    transition logs;
+  * straggler detection — rolling-p95 thresholds, flag-once semantics,
+    the on_straggler re-dispatch hint, and the bounded dispatch-ordered
+    registry (cap + resolved-head drain);
+  * feedback seams — suspended sites drop out of `pick`/`idle_slots`
+    (the stealer's thief test), per-executor drain on Falkon services;
+  * the JSONL metrics stream — emission, `trace_view` validation,
+    `live_monitor` rendering, backpressure watermark events;
+  * sim/real tracer consistency — the same federated workflow via
+    QueueTransport + ThreadExecutorPool on RealClock produces the same
+    task/span accounting as its SimClock run (PR 7 tested sim only).
+"""
+import json
+import os
+import sys
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core import (DRPConfig, Engine, FalkonConfig, FalkonProvider,
+                        FalkonService, FaultInjector, FederatedEngine,
+                        HealthConfig, HealthMonitor, LocalProvider,
+                        METRICS_STREAM_SCHEMA, RealClock, RetryPolicy,
+                        RollingStat, SimClock, TaskFailure,
+                        ThreadExecutorPool, Tracer, Workflow)
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+from tools.live_monitor import render_table  # noqa: E402
+from tools.trace_view import main as trace_view_main  # noqa: E402
+from tools.trace_view import validate_metrics_stream  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# RollingStat
+# ---------------------------------------------------------------------------
+
+def test_rolling_stat_windowed_counts_and_expiry():
+    rs = RollingStat(window=10.0, buckets=5)
+    rs.observe(1.0, 1.0)
+    rs.observe(3.0, 0.0)
+    assert rs.count(9.9) == 2
+    assert rs.mean(9.9) == pytest.approx(0.5)
+    assert rs.rate(9.9) == pytest.approx(0.2)
+    # the t=1 bucket (epoch 0) leaves the window at t >= 10
+    assert rs.count(10.5) == 1
+    # everything expires once the whole window has passed
+    assert rs.count(25.0) == 0
+    assert rs.mean(25.0) == 0.0
+
+
+def test_rolling_stat_drops_observations_older_than_window():
+    rs = RollingStat(window=10.0, buckets=5)
+    rs.observe(100.0, 1.0)
+    rs.observe(5.0, 1.0)            # older than the whole window: dropped
+    assert rs.count(100.0) == 1
+    assert rs.total(100.0) == pytest.approx(1.0)
+
+
+def test_rolling_stat_percentiles_from_kept_samples():
+    rs = RollingStat(window=10.0, buckets=10, keep_samples=4)
+    for i, v in enumerate((5.0, 1.0, 9.0, 3.0, 7.0)):
+        rs.observe(float(i), v)
+    assert rs.percentile(1.0, 4.0) == 9.0
+    assert rs.percentile(0.0, 4.0) == 1.0
+    # without keep_samples there is nothing to rank
+    bare = RollingStat(window=10.0, buckets=10)
+    bare.observe(0.0, 5.0)
+    assert bare.percentile(0.95, 0.0) == 0.0
+
+
+def test_rolling_stat_keep_samples_bounded_per_bucket():
+    rs = RollingStat(window=10.0, buckets=1, keep_samples=3)
+    for v in range(100):
+        rs.observe(1.0, float(v))
+    assert rs.count(1.0) == 100          # counts stay exact
+    b = rs._ring[0]
+    assert len(b[2]) == 3                # samples capped
+
+
+def test_rolling_stat_observe_bulk_matches_individual():
+    a = RollingStat(window=20.0, buckets=4)
+    b = RollingStat(window=20.0, buckets=4)
+    for _ in range(7):
+        a.observe(3.0, 1.0)
+    for _ in range(5):
+        a.observe(3.0, 0.0)
+    b.observe_bulk(3.0, 12, 7.0)
+    assert a.count(3.0) == b.count(3.0) == 12
+    assert a.mean(3.0) == pytest.approx(b.mean(3.0))
+    assert a.snapshot(3.0) == b.snapshot(3.0)
+    b.observe_bulk(3.0, 0, 0.0)          # no-op
+    assert b.count(3.0) == 12
+
+
+def test_rolling_stat_rejects_bad_parameters():
+    with pytest.raises(ValueError):
+        RollingStat(window=0.0)
+    with pytest.raises(ValueError):
+        RollingStat(window=10.0, buckets=0)
+
+
+# ---------------------------------------------------------------------------
+# helpers: a small N-site Falkon grid (mirrors benchmarks/health_recovery)
+# ---------------------------------------------------------------------------
+
+def _grid(clock, n_sites=2, cap=8, tracer=None, inj=None,
+          host_fail_threshold=None):
+    kw = {"host_suspend_time": 300.0}
+    if host_fail_threshold is not None:
+        kw["host_fail_threshold"] = host_fail_threshold
+    eng = Engine(clock, tracer=tracer, fault_injector=inj,
+                 retry_policy=RetryPolicy(max_retries=8, backoff=1.0),
+                 provenance="summary")
+    services = []
+    for i in range(n_sites):
+        svc = FalkonService(clock, FalkonConfig(
+            drp=DRPConfig(max_executors=cap, alloc_latency=0.0,
+                          alloc_chunk=cap), **kw), name=f"site{i}")
+        svc.provision(cap)
+        eng.add_site(f"site{i}", FalkonProvider(svc), capacity=cap)
+        services.append(svc)
+    return eng, services
+
+
+# ---------------------------------------------------------------------------
+# state machine: degrade / recover
+# ---------------------------------------------------------------------------
+
+def test_degraded_site_recovers_when_faults_stop():
+    clock = SimClock()
+    inj = FaultInjector(seed=7, clock=clock)
+    inj.fail_site_window("site1", 0.3, start=6.0, end=14.0)
+    eng, _ = _grid(clock, inj=inj)
+    cfg = HealthConfig(window=8.0, buckets=4, min_samples=8,
+                       degrade_error_rate=0.10, drain_error_rate=0.80,
+                       blacklist_error_rate=0.90)
+    hm = HealthMonitor(clock, cfg)
+    hm.watch(eng)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(500)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    moves = [(tr["site"], tr["from"], tr["to"]) for tr in hm.transitions]
+    assert ("site1", "healthy", "degraded") in moves
+    assert ("site1", "degraded", "healthy") in moves
+    # site0 never took faults and never left healthy
+    assert not [m for m in moves if m[0] == "site0"]
+    assert hm.states() == {"site0": "healthy", "site1": "healthy"}
+    # degrade actuates through the derate seam and is restored on recovery
+    site1 = eng.balancer.sites[1]
+    assert site1.derate == 1.0 and site1.health_state == "healthy"
+
+
+# ---------------------------------------------------------------------------
+# state machine: drain -> blacklist, revocation, stream, determinism
+# ---------------------------------------------------------------------------
+
+_DRAIN_CFG = HealthConfig(
+    window=8.0, buckets=4, min_samples=6,
+    degrade_error_rate=0.08, drain_error_rate=0.15,
+    blacklist_error_rate=0.45, recover_error_rate=0.10,
+    drain_backoff=2.0, backoff_factor=2.0, blacklist_backoff=1e5,
+    blacklist_after_drains=2, revoke_on_drain=True, emit_interval=2.0)
+
+
+def _drain_scenario(stream_path=None):
+    """site1 fails every attempt (fail-slow) from t=6; the monitor must
+    blacklist it and hand its queued tasks back.  Returns (hm, eng, outs)."""
+    clock = SimClock()
+    tracer = Tracer()
+    inj = FaultInjector(seed=11, clock=clock)
+    inj.fail_site_window("site1", 1.0, start=6.0, latency=2.0)
+    eng, _ = _grid(clock, inj=inj, tracer=tracer)
+    hm = HealthMonitor(clock, _DRAIN_CFG, tracer=tracer)
+    hm.watch(eng)
+    for svc in (s.provider.service for s in eng.balancer.sites):
+        hm.watch_service(svc)
+    if stream_path:
+        hm.attach_sink(stream_path)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(400)]
+    eng.run()
+    hm.emit_line()
+    hm.close()
+    return hm, eng, outs
+
+
+def test_failing_site_is_blacklisted_and_queue_revoked():
+    hm, eng, outs = _drain_scenario()
+    assert all(o.resolved for o in outs)
+    assert hm.states()["site1"] == "blacklisted"
+    assert hm.states()["site0"] == "healthy"
+    assert any(tr["site"] == "site1" and tr["to"] == "blacklisted"
+               for tr in hm.transitions)
+    # drain handed site1's queued tasks back (no retry charge), and the
+    # engine's revocation path reported them to the monitor
+    assert hm.tasks_revoked > 0
+    assert eng.stats().get("revoked", 0) == hm.tasks_revoked
+    # the suspension seam holds: the blacklist parked the site for the
+    # long backoff (the clock itself runs on to the probe poke at the end)
+    site1 = eng.balancer.sites[1]
+    assert site1.suspended_until >= _DRAIN_CFG.blacklist_backoff
+    assert site1.health_state == "blacklisted"
+
+
+def test_transition_log_replays_byte_identically():
+    hm1, _, _ = _drain_scenario()
+    hm2, _, _ = _drain_scenario()
+    assert hm1.transitions            # non-trivial log
+    assert hm1.transition_log_json() == hm2.transition_log_json()
+
+
+def test_metrics_stream_emits_and_validates(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    hm, _, _ = _drain_scenario(stream_path=path)
+    assert hm.lines_emitted > 0
+    with open(path, encoding="utf-8") as f:
+        lines = f.readlines()
+    assert validate_metrics_stream(lines) == []
+    assert trace_view_main([path, "--validate"]) == 0
+    snaps = [json.loads(ln) for ln in lines]
+    last = snaps[-1]
+    assert last["schema"] == METRICS_STREAM_SCHEMA
+    assert last["sites"]["site1"]["state"] == "blacklisted"
+    assert last["transitions"] == len(hm.transitions)
+    assert last["revoked"] == hm.tasks_revoked
+    # timestamps never go backwards across the stream
+    ts = [s["t"] for s in snaps]
+    assert ts == sorted(ts)
+    # the live view renders it (smoke: names + state marks show up)
+    table = render_table(last)
+    assert "site1" in table and "blacklisted" in table
+    assert "X site1" in table          # blacklist marker
+
+
+def test_trace_view_rejects_malformed_metrics_stream(tmp_path, capsys):
+    bad = tmp_path / "bad.jsonl"
+    good_line = json.dumps({
+        "schema": METRICS_STREAM_SCHEMA, "t": 1.0, "sites": {},
+        "backlog": 0, "inflight": 0, "tracked": 0, "stragglers": 0,
+        "revoked": 0, "transitions": 0})
+    bad.write_text("\n".join([
+        good_line,
+        "{not json",
+        json.dumps({"schema": "wrong/v1", "t": 2.0}),
+        json.dumps({"schema": METRICS_STREAM_SCHEMA, "t": 0.5,
+                    "sites": {}, "backlog": 0, "inflight": 0,
+                    "tracked": 0, "stragglers": 0, "revoked": 0,
+                    "transitions": 0}),                 # t goes backwards
+        json.dumps({"schema": METRICS_STREAM_SCHEMA, "t": 3.0,
+                    "sites": {"s": {"state": "weird", "error_rate": 2.0,
+                                    "window_completions": 0,
+                                    "outstanding": 0, "queue": 0}},
+                    "backlog": -1, "inflight": 0, "tracked": 0,
+                    "stragglers": 0, "revoked": 0, "transitions": 0}),
+    ]) + "\n")
+    errors = validate_metrics_stream(bad.read_text().splitlines())
+    assert len(errors) >= 4
+    assert trace_view_main([str(bad), "--validate"]) == 1
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("\n")
+    assert trace_view_main([str(empty), "--validate"]) == 1
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# state machine: probe-based recovery after a drain
+# ---------------------------------------------------------------------------
+
+def test_drained_site_recovers_via_probe_when_faults_stop():
+    clock = SimClock()
+    inj = FaultInjector(seed=3, clock=clock)
+    # faults stop at t=8; the drain backoff parks the site past that, so
+    # the probe traffic lands on a healthy site again
+    inj.fail_site_window("site1", 0.5, start=4.0, end=8.0)
+    eng, _ = _grid(clock, inj=inj)
+    cfg = HealthConfig(window=4.0, buckets=4, min_samples=4,
+                       degrade_error_rate=0.08, drain_error_rate=0.15,
+                       blacklist_error_rate=0.95, recover_error_rate=0.10,
+                       drain_backoff=6.0, blacklist_after_drains=5,
+                       revoke_on_drain=True)
+    hm = HealthMonitor(clock, cfg)
+    hm.watch(eng)
+    for svc in (s.provider.service for s in eng.balancer.sites):
+        hm.watch_service(svc)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(600)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    moves = [(tr["from"], tr["to"], tr["reason"]) for tr in hm.transitions
+             if tr["site"] == "site1"]
+    assert any(to == "drained" for _, to, _ in moves)
+    assert any(frm == "drained" and to == "healthy"
+               and reason.startswith("probe ok")
+               for frm, to, reason in moves)
+    assert hm.states()["site1"] == "healthy"
+
+
+# ---------------------------------------------------------------------------
+# straggler detection
+# ---------------------------------------------------------------------------
+
+def test_straggler_flagged_once_with_redispatch_hint():
+    clock = SimClock()
+    tracer = Tracer()
+    hints = []
+    cfg = HealthConfig(window=10.0, buckets=5, min_samples=6,
+                       duration_window=60.0, duration_stride=1,
+                       straggler_factor=3.0, straggler_min_s=1.0,
+                       straggler_interval=2.0)
+    eng, _ = _grid(clock, n_sites=1, cap=6, tracer=tracer)
+    hm = HealthMonitor(clock, cfg, tracer=tracer,
+                       on_straggler=lambda t, a, thr: hints.append(
+                           (t.name, a, thr)))
+    hm.watch(eng)
+    # phase 1: build the rolling p95 for the "work" key (stride 1: every
+    # success is sampled)
+    outs = [eng.submit("work", None, duration=1.0) for _ in range(12)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    assert hm.stragglers_flagged == 0
+    # phase 2: one same-key task runs 40x the p95 -> flagged exactly once
+    slow = eng.submit("work", None, duration=40.0)
+    eng.run()
+    assert slow.resolved
+    assert hm.stragglers_flagged == 1
+    assert len(hints) == 1
+    name, age, thr = hints[0]
+    assert name == "work"
+    assert thr >= cfg.straggler_min_s
+    assert age > thr
+    assert len(hm.straggler_log) == 1
+    assert tracer.event_counts()["straggler"]["count"] == 1
+    assert hm.metrics()["sites"]["site0"]["stragglers"] == 1
+
+
+def test_straggler_registry_is_capped_and_head_drains():
+    clock = SimClock()
+    hm = HealthMonitor(clock, HealthConfig(straggler_track_cap=4))
+
+    def fake_task(i):
+        return SimpleNamespace(id=i, submit_time=0.0,
+                               output=SimpleNamespace(resolved=False))
+
+    tasks = [fake_task(i) for i in range(10)]
+    for t in tasks:
+        hm.task_dispatched(t, 0.0)
+    # admissions past the cap are not registered
+    assert len(hm._running) == 4
+    assert [t.id for t in hm._running] == [0, 1, 2, 3]
+    # completions never touch the registry (§13 hot-path contract)...
+    tasks[0].output.resolved = True
+    tasks[1].output.resolved = True
+    hm.task_finished(tasks[0], None, False, 1.0)
+    assert len(hm._running) == 4
+    # ...resolved entries drain from the head during scans instead
+    hm._scan(1.0)
+    assert [t.id for t in hm._running] == [2, 3]
+    for t in tasks:
+        t.output.resolved = True
+    hm._scan(2.0)
+    assert len(hm._running) == 0 and not hm._flagged
+
+
+def test_registry_released_when_run_goes_idle():
+    hm, eng, _ = _drain_scenario()
+    # the self-disarming tick cleared the registry at idle (§9 GC contract)
+    assert not hm._armed
+    assert len(hm._running) == 0
+    assert hm.snapshot_line()["tracked"] == 0
+    assert hm.snapshot_line()["inflight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# fault injector: site-correlated time windows
+# ---------------------------------------------------------------------------
+
+def test_fail_site_window_applies_only_inside_window():
+    clock = SimClock()
+    inj = FaultInjector(seed=0, clock=clock)
+    inj.fail_site_window("bad", 1.0, start=10.0, end=20.0,
+                         latency=2.5, only_task="sim")
+    assert inj.timed                    # latency rules are dispatch-timed
+
+    def check_at(t, name="sim0", site="bad"):
+        clock.schedule(t - clock.now(),
+                       lambda: inj.check(name, "", 0, site=site))
+        clock.run()
+
+    check_at(5.0)                       # before the window: clean
+    with pytest.raises(TaskFailure) as exc:
+        check_at(15.0)                  # inside: deterministic failure
+    assert exc.value.latency == 2.5
+    check_at(16.0, site="good")         # other sites unaffected
+    check_at(17.0, name="other")        # task filter respected
+    check_at(25.0)                      # window closed
+
+
+def test_fail_site_window_requires_clock():
+    with pytest.raises(ValueError):
+        FaultInjector(seed=0).fail_site_window("s", 1.0)
+
+
+# ---------------------------------------------------------------------------
+# per-executor drain
+# ---------------------------------------------------------------------------
+
+def test_executor_drain_suspends_failing_hosts():
+    clock = SimClock()
+    tracer = Tracer()
+    inj = FaultInjector(seed=5, clock=clock)
+    inj.fail_site_window("site0", 1.0, start=0.0, end=6.0)
+    # keep Falkon's own consecutive-failure heuristic out of the way so
+    # the suspensions observed are the monitor's
+    eng, services = _grid(clock, n_sites=1, cap=3, tracer=tracer,
+                          inj=inj, host_fail_threshold=99)
+    cfg = HealthConfig(window=8.0, buckets=4, min_samples=6,
+                       drain_error_rate=0.9, blacklist_error_rate=0.95,
+                       degrade_error_rate=0.85,
+                       executor_drain_error_rate=0.5,
+                       executor_min_samples=2, executor_backoff=3.0)
+    hm = HealthMonitor(clock, cfg, tracer=tracer)
+    hm.watch(eng)
+    hm.watch_service(services[0])
+    assert services[0].health is hm     # hook installed when configured
+    outs = [eng.submit(f"t{i}", None, duration=0.5) for i in range(20)]
+    eng.run()
+    assert all(o.resolved for o in outs)
+    assert hm.executors_drained >= 1
+    assert tracer.event_counts()["executor_drained"]["count"] \
+        == hm.executors_drained
+
+
+def test_watch_service_without_executor_tracking_adds_no_hook():
+    clock = SimClock()
+    eng, services = _grid(clock, n_sites=1)
+    hm = HealthMonitor(clock)           # executor_drain_error_rate=None
+    hm.watch(eng)
+    hm.watch_service(services[0])
+    assert services[0].health is None   # zero service hot-path cost
+    hm.on_executor(services[0], None, False, 0.0)   # disabled: no-op
+    assert hm.executors_drained == 0
+
+
+# ---------------------------------------------------------------------------
+# federation wiring + the suspended-site steal seam
+# ---------------------------------------------------------------------------
+
+def test_monitor_watches_every_federation_shard():
+    clock = SimClock()
+    fed = FederatedEngine(2, clock=clock,
+                          engine_kwargs={"provenance": "summary"})
+    for i, eng in enumerate(fed.shards):
+        eng.add_site(f"local{i}", LocalProvider(clock, concurrency=4),
+                     capacity=4)
+    hm = HealthMonitor(clock, HealthConfig(window=4.0, buckets=4))
+    hm.watch(fed)
+    assert fed.health is hm
+    assert all(e.health is hm for e in fed.shards)
+    wf = Workflow("fed", fed)
+    outs = []
+    for c in range(40):
+        f = None
+        for s in range(3):
+            f = fed.submit(f"stage{s}", None,
+                           [f] if f is not None else [], duration=1.0)
+        outs.append(f)
+    out = wf.gather(outs)
+    wf.run()
+    assert out.resolved
+    # the monitor saw sites on both shards, all healthy
+    assert hm.states() == {"local0": "healthy", "local1": "healthy"}
+    line = hm.snapshot_line()
+    assert set(line["sites"]) == {"local0", "local1"}
+    assert line["inflight"] == 0
+
+
+def test_suspended_site_is_skipped_by_pick_and_idle_slots():
+    clock = SimClock()
+    eng, _ = _grid(clock, n_sites=2, cap=4)
+    site0, site1 = eng.balancer.sites
+    assert eng.balancer.idle_slots(0.0) == 8
+    # a drained site stops being a placement target and a steal thief
+    site1.suspended_until = 100.0
+    assert eng.balancer.idle_slots(0.0) == 4
+    assert eng.balancer.pick(None, 0.0) is site0
+    # suspending everything leaves no thief capacity at all
+    site0.suspended_until = 100.0
+    assert eng.balancer.idle_slots(0.0) == 0
+    assert eng.balancer.pick(None, 0.0) is None
+    # lapse: capacity comes back
+    assert eng.balancer.idle_slots(200.0) == 8
+
+
+# ---------------------------------------------------------------------------
+# tracer event stream: subscribe, windowed rates, alerts, watermarks
+# ---------------------------------------------------------------------------
+
+def test_tracer_subscribe_feeds_monitor_alerts():
+    clock = SimClock()
+    tracer = Tracer()
+    hm = HealthMonitor(clock, HealthConfig(window=10.0, buckets=5),
+                       tracer=tracer)
+    tracer.event("worker_error", 1.0)
+    tracer.event("worker_error", 2.0)
+    tracer.event("steal", 2.0)          # not alert-worthy: ignored
+    assert set(hm._alerts) == {"worker_error"}
+    line = hm.snapshot_line(3.0)
+    assert line["alerts"]["worker_error"]["count"] == 2
+    # windowed event rates ride the same stream and decay
+    rates = tracer.event_rates(3.0)
+    assert rates["worker_error"]["count"] == 2
+    assert rates["steal"]["count"] == 1
+    later = 3.0 + 2.0 * tracer.rate_window
+    assert tracer.event_rates(later)["worker_error"]["count"] == 0
+
+
+def test_backpressure_watermark_events():
+    clock = SimClock()
+    tracer = Tracer()
+    eng = Engine(clock, tracer=tracer, provenance="summary")
+    # two sites: with a choice to steer, the engine throttles dispatch at
+    # slack x capacity and holds the excess in its ready backlog
+    eng.add_site("a", LocalProvider(clock, concurrency=2), capacity=2)
+    eng.add_site("b", LocalProvider(clock, concurrency=2), capacity=2)
+    hm = HealthMonitor(clock, HealthConfig(
+        queue_high_watermark=2.0, queue_low_watermark=0.5), tracer=tracer)
+    hm.watch(eng)
+    outs = [eng.submit(f"t{i}", None, duration=1.0) for i in range(50)]
+    assert eng.ready_backlog() > 2 * eng.pool_capacity()
+    line = hm.emit_line()               # no sink: returns the line anyway
+    assert line["backlog"] == eng.ready_backlog()
+    assert tracer.event_counts()["backpressure_high"]["count"] == 1
+    eng.run()
+    assert all(o.resolved for o in outs)
+    hm.emit_line()
+    assert tracer.event_counts()["backpressure_low"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# sim/real consistency: QueueTransport + ThreadExecutorPool on RealClock
+# ---------------------------------------------------------------------------
+
+def _alternating(key, n):
+    _alternating.i += 1
+    return _alternating.i % n
+
+
+def _traced_federated_chain(real):
+    """The same 10-task inc chain across 2 shards, every edge crossing the
+    transport; sim or real depending on `real`."""
+    clock = RealClock() if real else SimClock()
+    tracer = Tracer(sample_every=1)
+    engines, pools = [], []
+    for i in range(2):
+        pool = ThreadExecutorPool(clock) if real else None
+        svc = FalkonService(clock, FalkonConfig(
+            drp=DRPConfig(max_executors=2, alloc_latency=0.0,
+                          alloc_chunk=2)), pool=pool)
+        eng = Engine(clock, tracer=tracer)
+        eng.add_site(f"pod{i}", FalkonProvider(svc), capacity=2)
+        engines.append(eng)
+        pools.append(pool)
+    _alternating.i = -1
+    fed = FederatedEngine(engines, clock=clock, partitioner=_alternating,
+                          transport="queue", tracer=tracer)
+    wf = Workflow("obs", fed)
+    inc = wf.atomic(lambda x: x + 1, name="inc")
+    v = inc(0)
+    for _ in range(9):
+        v = inc(v)
+    wf.run()
+    for p in pools:
+        if p is not None:
+            p.shutdown()
+    assert v.get() == 10
+    assert fed.cross_shard_edges >= 9
+    return tracer, fed
+
+
+def test_tracer_consistent_across_sim_and_real_transport():
+    """PR 7's federation trace tests ran on SimClock only; the same
+    workflow through QueueTransport + ThreadExecutorPool on RealClock must
+    produce the same task/span accounting."""
+    tr_sim, fed_sim = _traced_federated_chain(real=False)
+    tr_real, fed_real = _traced_federated_chain(real=True)
+    for tr in (tr_sim, tr_real):
+        assert tr.tasks_seen == 10 and tr.tasks_done == 10
+        assert tr.tasks_failed == 0
+    # full sampling: one span per task, same names, same shard spread
+    assert len(tr_sim.spans) == len(tr_real.spans) == 10
+    assert sorted(sp.name for sp in tr_sim.spans) == \
+        sorted(sp.name for sp in tr_real.spans)
+    assert {sp.shard for sp in tr_sim.spans} == \
+        {sp.shard for sp in tr_real.spans} == {0, 1}
+    assert all(sp.status == "ok" for sp in tr_real.spans)
+    # both transports traced their mailbox flushes
+    for tr, fed in ((tr_sim, fed_sim), (tr_real, fed_real)):
+        assert tr.event_counts()["mailbox_flush"]["count"] >= 1
+        assert fed.tasks_completed == 10

@@ -1,0 +1,138 @@
+"""Tail the HealthMonitor JSONL metrics stream as a live per-site table
+(DESIGN.md §13).
+
+The stream (schema ``repro.metrics_stream/v1``) is produced by
+``HealthMonitor.attach_sink("run.jsonl")`` — one JSON object per cadence
+with per-site health state, windowed error rates, queue depths, and
+straggler/revocation counters.  This tool renders the latest line as a
+table and, with ``--follow``, keeps polling the file so a run can be
+watched while it executes::
+
+    python tools/live_monitor.py run.jsonl             # follow (default)
+    python tools/live_monitor.py run.jsonl --once      # render last line
+    python tools/live_monitor.py run.jsonl --interval 0.5
+
+Lines that fail to parse are skipped with a warning on stderr (a writer
+may be mid-line); `tools/trace_view.py <file>.jsonl --validate` is the
+strict schema check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+_STATE_MARK = {"healthy": " ", "degraded": "~", "drained": "!",
+               "blacklisted": "X"}
+
+
+def render_table(snap: dict) -> str:
+    """Render one metrics-stream record as a fixed-width per-site table."""
+    lines = [
+        f"t={snap.get('t', 0.0):10.2f}s   "
+        f"backlog={snap.get('backlog', 0):<6} "
+        f"inflight={snap.get('inflight', 0):<6} "
+        f"tracked={snap.get('tracked', 0):<6} "
+        f"stragglers={snap.get('stragglers', 0):<4} "
+        f"revoked={snap.get('revoked', 0):<5} "
+        f"transitions={snap.get('transitions', 0)}",
+        f"{'':1} {'site':<12} {'state':<12} {'err%':>6} {'n':>6} "
+        f"{'tasks/s':>8} {'ewma_s':>8} {'p95_s':>8} {'util':>6} "
+        f"{'queue':>6} {'strag':>5} {'rvk':>5} {'susp_s':>7}",
+    ]
+    for name, s in sorted(snap.get("sites", {}).items()):
+        mark = _STATE_MARK.get(s.get("state", ""), "?")
+        lines.append(
+            f"{mark} {name:<12} {s.get('state', '?'):<12} "
+            f"{100.0 * s.get('error_rate', 0.0):>6.1f} "
+            f"{s.get('window_completions', 0):>6} "
+            f"{s.get('tasks_per_s', 0.0):>8.2f} "
+            f"{s.get('latency_ewma_s', 0.0):>8.2f} "
+            f"{s.get('latency_p95_s', 0.0):>8.2f} "
+            f"{100.0 * s.get('utilization', 0.0):>5.0f}% "
+            f"{s.get('queue', 0):>6} "
+            f"{s.get('stragglers', 0):>5} "
+            f"{s.get('revoked', 0):>5} "
+            f"{s.get('suspended_for_s', 0.0):>7.1f}")
+    alerts = snap.get("alerts")
+    if alerts:
+        parts = [f"{k}: {v.get('count', 0)} in {v.get('window_s', 0):g}s"
+                 for k, v in sorted(alerts.items())]
+        lines.append("  alerts: " + ", ".join(parts))
+    return "\n".join(lines)
+
+
+def _parse_lines(chunk: str) -> list[dict]:
+    """Parse complete JSONL lines from `chunk`, skipping malformed ones."""
+    snaps = []
+    for ln in chunk.splitlines():
+        ln = ln.strip()
+        if not ln:
+            continue
+        try:
+            obj = json.loads(ln)
+        except ValueError:
+            print(f"live_monitor: skipping malformed line: {ln[:60]}...",
+                  file=sys.stderr)
+            continue
+        if isinstance(obj, dict):
+            snaps.append(obj)
+    return snaps
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="live per-site health table from a metrics-stream "
+                    "JSONL file")
+    ap.add_argument("path", help="metrics-stream JSONL file "
+                                 "(HealthMonitor.attach_sink output)")
+    ap.add_argument("--once", action="store_true",
+                    help="render the last valid line and exit")
+    ap.add_argument("--follow", action="store_true",
+                    help="poll for new lines (default unless --once)")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="poll interval in seconds (default 1.0)")
+    args = ap.parse_args(argv)
+
+    if args.once:
+        with open(args.path, encoding="utf-8") as f:
+            snaps = _parse_lines(f.read())
+        if not snaps:
+            print(f"no valid metrics-stream lines in {args.path}",
+                  file=sys.stderr)
+            return 1
+        print(render_table(snaps[-1]))
+        return 0
+
+    # follow mode: re-read from the last offset, render the newest line
+    last = None
+    offset = 0
+    try:
+        while True:
+            try:
+                with open(args.path, encoding="utf-8") as f:
+                    f.seek(offset)
+                    chunk = f.read()
+                    offset = f.tell()
+            except FileNotFoundError:
+                chunk = ""
+            snaps = _parse_lines(chunk)
+            if snaps:
+                last = snaps[-1]
+            if last is not None:
+                # clear screen + home, then the current table
+                sys.stdout.write("\x1b[2J\x1b[H")
+                print(render_table(last))
+                sys.stdout.flush()
+            time.sleep(args.interval)
+    except KeyboardInterrupt:
+        return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

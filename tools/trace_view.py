@@ -1,7 +1,7 @@
 """Render and validate observability artifacts from the command line
-(DESIGN.md §12).
+(DESIGN.md §12/§13).
 
-Two artifact kinds, auto-detected by schema:
+Three artifact kinds, auto-detected by schema / extension:
 
   * Chrome trace-event JSON (``Tracer.export_chrome_trace``) — validated
     against the trace-event contract (required keys per phase type,
@@ -12,12 +12,19 @@ Two artifact kinds, auto-detected by schema:
     ``repro.run_report/v1``) — rendered as the standard human-readable
     breakdown (critical path, per-stage totals, wait percentiles,
     per-site utilization).
+  * Health metrics streams (``HealthMonitor.attach_sink``, JSONL with
+    schema ``repro.metrics_stream/v1``, detected by the ``.jsonl``
+    extension) — validated line-by-line (schema tag, numeric
+    monotone-non-decreasing ``t``, well-formed per-site entries) and
+    rendered as the last line's per-site table
+    (``tools/live_monitor.py`` is the live view).
 
 Usage::
 
     python tools/trace_view.py trace.json            # auto-detect + render
     python tools/trace_view.py trace.json --validate # schema check only
     python tools/trace_view.py report.json --json    # re-emit normalized
+    python tools/trace_view.py run.jsonl --validate  # metrics-stream check
 
 Exit status is non-zero on a malformed artifact, so CI can gate on it
 (the ``docs`` job runs this against the committed sample trace).
@@ -71,6 +78,81 @@ def validate_chrome_trace(trace: dict) -> list[str]:
     return errors
 
 
+_METRICS_SCHEMA = "repro.metrics_stream/v1"
+_SITE_REQUIRED = ("state", "error_rate", "window_completions",
+                  "outstanding", "queue")
+_SITE_STATES = {"healthy", "degraded", "drained", "blacklisted"}
+
+
+def validate_metrics_stream(lines: list[str]) -> list[str]:
+    """Line-by-line validation of a ``repro.metrics_stream/v1`` JSONL
+    stream (``HealthMonitor.attach_sink`` output); returns a list of
+    problems (empty = valid).  Line numbers are 1-based."""
+    errors = []
+    n_valid = 0
+    last_t = None
+    for lineno, raw in enumerate(lines, 1):
+        where = f"line {lineno}"
+        raw = raw.strip()
+        if not raw:
+            continue
+        try:
+            obj = json.loads(raw)
+        except ValueError as e:
+            errors.append(f"{where}: not valid JSON ({e})")
+            continue
+        if not isinstance(obj, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        if obj.get("schema") != _METRICS_SCHEMA:
+            errors.append(f"{where}: schema={obj.get('schema')!r}, "
+                          f"expected {_METRICS_SCHEMA!r}")
+            continue
+        t = obj.get("t")
+        if not isinstance(t, (int, float)) or isinstance(t, bool):
+            errors.append(f"{where}: 't' must be numeric")
+            continue
+        if last_t is not None and t < last_t:
+            errors.append(f"{where}: 't' went backwards "
+                          f"({t} < {last_t})")
+        last_t = t
+        sites = obj.get("sites")
+        if not isinstance(sites, dict):
+            errors.append(f"{where}: 'sites' missing or not an object")
+            continue
+        for name, entry in sites.items():
+            if not isinstance(entry, dict):
+                errors.append(f"{where}: site {name!r} entry not an "
+                              f"object")
+                continue
+            missing = [k for k in _SITE_REQUIRED if k not in entry]
+            if missing:
+                errors.append(f"{where}: site {name!r} missing keys "
+                              f"{missing}")
+            state = entry.get("state")
+            if state not in _SITE_STATES:
+                errors.append(f"{where}: site {name!r} bad state "
+                              f"{state!r}")
+            er = entry.get("error_rate")
+            if not isinstance(er, (int, float)) or isinstance(er, bool) \
+                    or not 0.0 <= er <= 1.0:
+                errors.append(f"{where}: site {name!r} error_rate "
+                              f"{er!r} not in [0, 1]")
+        for key in ("backlog", "inflight", "tracked", "stragglers",
+                    "revoked", "transitions"):
+            v = obj.get(key)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                errors.append(f"{where}: {key!r} must be a non-negative "
+                              f"integer (got {v!r})")
+        n_valid += 1
+        if len(errors) > 20:
+            errors.append("... (truncated)")
+            break
+    if n_valid == 0 and not errors:
+        errors.append("no metrics-stream lines found")
+    return errors
+
+
 def summarize_chrome_trace(trace: dict) -> str:
     events = trace["traceEvents"]
     procs: dict[int, str] = {}
@@ -120,6 +202,28 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--json", action="store_true",
                     help="re-emit the parsed artifact as normalized JSON")
     args = ap.parse_args(argv)
+
+    if args.path.endswith(".jsonl"):
+        with open(args.path, encoding="utf-8") as f:
+            lines = f.readlines()
+        errors = validate_metrics_stream(lines)
+        for e in errors:
+            print(f"FAIL {e}")
+        if errors:
+            print(f"{len(errors)} metrics-stream problem(s) in "
+                  f"{args.path}")
+            return 1
+        snaps = [json.loads(ln) for ln in lines if ln.strip()]
+        if args.json:
+            json.dump(snaps, sys.stdout, indent=2)
+            print()
+        elif args.validate:
+            print(f"valid metrics stream: {args.path} "
+                  f"({len(snaps)} lines)")
+        else:
+            from live_monitor import render_table
+            print(render_table(snaps[-1]))
+        return 0
 
     with open(args.path, encoding="utf-8") as f:
         data = json.load(f)
