@@ -228,7 +228,10 @@ def run() -> list[dict]:
         "skew experiment not skewed enough to exercise stealing"
     assert skew_steal["makespan_sim_s"] < skew_nosteal["makespan_sim_s"]
     # steal metrics are bounded reservoirs, not per-task logs
-    assert len(skew_steal["steal_batch"]) == 7          # summary dict keys
+    # a fixed-size summary dict, not a per-task log: the reservoir
+    # keeps at most `cap` samples however many batches were stolen
+    assert "p95" in skew_steal["steal_batch"]
+    assert skew_steal["steal_batch"]["samples_kept"] <= 512
     assert skew_steal["restage_gb_est"] > 0.0
 
     return [{

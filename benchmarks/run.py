@@ -40,6 +40,7 @@ MODULES = [
     "benchmarks.real_throughput",      # §10: real threads, Fig-6 shape
     "benchmarks.observability",        # §12: tracing overhead + sample trace
     "benchmarks.health_recovery",      # §13: monitored recovery vs blind
+    "benchmarks.real_federation",      # §14: process-per-shard dispatchers
 ]
 
 

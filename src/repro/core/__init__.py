@@ -31,6 +31,8 @@ from repro.core.health import (METRICS_STREAM_SCHEMA, HealthConfig,
 from repro.core.metrics import StreamStat
 from repro.core.observability import (BoundedLog, MetricsRegistry, RunReport,
                                       Span, Tracer, build_report)
+from repro.core.procfed import (ProcessFederation, ProcessTransport, Ref,
+                                ShardHost, ShardSpec, SocketTransport)
 from repro.core.provenance import VDC, InvocationRecord
 from repro.core.providers import (BatchSchedulerProvider, ClusteringProvider,
                                   FalkonProvider, LocalProvider, Provider,
@@ -65,6 +67,8 @@ __all__ = [
     "SizeAwarePolicy", "ShardDirectory",
     "FederatedEngine", "Mailbox", "MailboxTransport", "QueueTransport",
     "WorkStealer", "ShardedDataLayer",
+    "ProcessFederation", "ShardSpec", "ShardHost", "ProcessTransport",
+    "SocketTransport", "Ref",
     "hash_partitioner", "skewed_partitioner", "inputs_partitioner",
     "Dataset", "Mapper", "ListMapper", "FileSystemMapper", "CSVMapper",
     "ShardMapper", "PhysicalRef", "Struct", "ArrayOf", "Primitive",

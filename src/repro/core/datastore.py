@@ -428,18 +428,34 @@ class ShardDirectory:
     executor count and task count.
     """
 
-    def __init__(self):
+    def __init__(self, on_change=None):
         self._map: dict[str, set[int]] = {}
+        # cross-process propagation hook (DESIGN.md §14): in a
+        # process-per-shard federation each shard's directory is local, so
+        # membership changes must travel as messages instead of
+        # shared-memory mutation — `on_change("add"|"drop", name, shard)`
+        # fires on every first-holder add / last-holder drop and the shard
+        # host batches the deltas to the parent's replica.  None (the
+        # in-process default) keeps add/drop allocation-free.
+        self.on_change = on_change
 
     def add(self, name: str, shard: int | None) -> None:
-        self._map.setdefault(name, set()).add(shard)
+        shards = self._map.get(name)
+        if shards is None:
+            self._map[name] = shards = set()
+        if shard not in shards:
+            shards.add(shard)
+            if self.on_change is not None:
+                self.on_change("add", name, shard)
 
     def drop(self, name: str, shard: int | None) -> None:
         shards = self._map.get(name)
-        if shards is not None:
+        if shards is not None and shard in shards:
             shards.discard(shard)
             if not shards:
                 del self._map[name]
+            if self.on_change is not None:
+                self.on_change("drop", name, shard)
 
     def shards_holding(self, name: str) -> frozenset:
         return frozenset(self._map.get(name, ()))

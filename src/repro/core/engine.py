@@ -92,6 +92,27 @@ class ReadyQueue:
         if not bucket:
             del self._buckets[app]
 
+    def peek(self, n: int) -> list:
+        """Up to n *tasks* from the newest end — what `steal(n)` would
+        migrate — largest bucket first, without removing anything.
+        O(apps + n); the directory-guided `WorkStealer` samples these to
+        price a candidate victim's restage cost before committing to a
+        steal (DESIGN.md §14)."""
+        out: list = []
+        if not self._len:
+            return out
+        # stable sort: ties keep first-arrival order, matching the
+        # max-by-length bucket choice steal() makes
+        for app in sorted(self._buckets,
+                          key=lambda a: -len(self._buckets[a])):
+            bucket = self._buckets[app]
+            take = min(len(bucket), n - len(out))
+            for i in range(1, take + 1):
+                out.append(bucket[-i][0])
+            if len(out) >= n:
+                break
+        return out
+
     def steal(self, n: int) -> list:
         """Pop up to n entries from the newest end, largest bucket first."""
         out = []

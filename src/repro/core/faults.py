@@ -42,6 +42,14 @@ class TaskFailure(Exception):
         self.kind = kind  # transient | host | site | revoked
         self.latency = latency
 
+    def __reduce__(self):
+        # Exception's default reduce keeps only `args` (the message), so a
+        # TaskFailure crossing a process boundary — a shard process
+        # reporting a failed task (DESIGN.md §14) — would silently revert
+        # to kind="transient" and lose its fail-slow latency
+        return (TaskFailure,
+                (self.args[0] if self.args else "", self.kind, self.latency))
+
 
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:

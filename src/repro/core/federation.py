@@ -146,19 +146,22 @@ class QueueTransport(MailboxTransport):
         self._clock: Clock | None = None
         self._deliver: Callable | None = None
         self.sends = 0
+        self.drains = 0
 
     def bind(self, clock: Clock, deliver: Callable) -> None:
         self._clock = clock
         self._deliver = deliver
 
     def send(self, msg) -> None:
-        self.sends += 1
         self._q.put(msg)
         # coalesce wakeups: one drain event per burst.  The drain clears
         # the flag *before* reading the queue, so a sender that observes
         # the flag still set is guaranteed its message is picked up by the
-        # drain that clears it.
+        # drain that clears it.  `sends` is bumped under the same lock:
+        # send() runs on producer threads under RealClock, and an unlocked
+        # += loses increments under contention.
         with self._lock:
+            self.sends += 1
             if self._wake_pending:
                 return
             self._wake_pending = True
@@ -167,6 +170,7 @@ class QueueTransport(MailboxTransport):
     def _drain(self) -> None:
         with self._lock:
             self._wake_pending = False
+        self.drains += 1          # clock thread only — no lock needed
         batch = []
         while True:
             try:
@@ -211,6 +215,12 @@ class Mailbox:
         self.messages = 0
         self.flushes = 0
         self.batch_stat = StreamStat(cap=256)   # messages per flush
+        # fid -> local future, for *envelope* delivery: a transport that
+        # crosses a process boundary cannot carry future objects, so the
+        # producer side sends (fid, ok, payload) and the consumer registers
+        # the future awaiting each fid here (DESIGN.md §14).  Entries are
+        # popped on delivery, so the map is bounded by in-flight envelopes.
+        self._awaiting: dict[int, DataFuture] = {}
 
     def post(self, proxy: DataFuture, src: DataFuture) -> None:
         self.messages += 1
@@ -224,14 +234,38 @@ class Mailbox:
             self._flush_at = now + self.latency
             self.clock.schedule(self.latency, self._flush)
 
+    def register_proxy(self, fid: int, fut: DataFuture) -> None:
+        """Bind a local future to a remote fid: the next `(fid, ok,
+        payload)` envelope delivered through this mailbox resolves it."""
+        self._awaiting[fid] = fut
+
     def _deliver(self, batch: list) -> None:
         """Transport drain target: resolve a batch of delivered messages on
-        the consumer's clock thread (same failure propagation as `_flush`)."""
-        for proxy, src in batch:
-            if src.failed:
-                proxy.set_error(src._error)
+        the consumer's clock thread (same failure propagation as `_flush`).
+
+        Two message shapes: in-process transports carry `(proxy, src)`
+        future pairs; process-boundary transports carry pickle-safe
+        `(fid, ok, payload)` envelopes resolved against `register_proxy`
+        registrations (unknown fids are ignored — the registration may
+        have been dropped by a shard death)."""
+        for msg in batch:
+            if len(msg) == 2:
+                proxy, src = msg
+                if src.failed:
+                    proxy.set_error(src._error)
+                else:
+                    proxy.set(src.get())
             else:
-                proxy.set(src.get())
+                # envelopes never pass through post(), so count them here
+                self.messages += 1
+                fid, ok, payload = msg
+                fut = self._awaiting.pop(fid, None)
+                if fut is None or fut.done:
+                    continue
+                if ok:
+                    fut.set(payload)
+                else:
+                    fut.set_error(payload)
         self.flushes += 1
         self.batch_stat.observe(self.clock.now(), len(batch))
         if self.tracer is not None:
@@ -300,11 +334,16 @@ class WorkStealer:
     """
 
     def __init__(self, clock: Clock, min_batch: int = 2,
-                 max_batch: int = 4096, interval: float = 0.0):
+                 max_batch: int = 4096, interval: float = 0.0,
+                 victim_policy: str = "load"):
+        if victim_policy not in ("load", "directory"):
+            raise ValueError(f"unknown victim_policy {victim_policy!r}; "
+                             f"expected 'load' or 'directory'")
         self.clock = clock
         self.min_batch = max(1, min_batch)
         self.max_batch = max_batch
         self.interval = interval
+        self.victim_policy = victim_policy
         self.fed: Optional["FederatedEngine"] = None
         self._scheduled = False
         self.steals = 0              # batches migrated
@@ -336,8 +375,9 @@ class WorkStealer:
         for thief in shards:
             if thief._pending or thief.balancer.idle_slots(now) <= 0:
                 continue
-            victim = max(shards, key=lambda s: len(s._pending))
-            if victim is thief or len(victim._pending) < self.min_batch:
+            victim = self._pick_victim(shards, thief, sdl)
+            if victim is None or victim is thief \
+                    or len(victim._pending) < self.min_batch:
                 continue
             n = min(len(victim._pending) // 2, self.max_batch)
             if n <= 0:
@@ -371,8 +411,51 @@ class WorkStealer:
                 thief._dispatch(task)
         self._scheduled = False
 
+    # -- victim selection ----------------------------------------------
+    def _pick_victim(self, shards, thief, sdl):
+        """Choose which shard the thief steals from.
+
+        ``"load"`` (default) is the original policy, byte-identical under
+        SimClock: the single most-loaded shard.  ``"directory"`` is
+        locality-aware (needs a `ShardedDataLayer`): among shards whose
+        backlog is within 2x of the maximum (so stealing still fixes the
+        imbalance), prefer the one whose sampled pending inputs the thief
+        would re-stage *least*, priced through the cross-shard directory.
+        Cost: O(shards) + O(candidates x sample x inputs) directory
+        probes per steal pass — bounded by the sample cap, never a full
+        queue scan."""
+        if self.victim_policy == "load" or sdl is None:
+            return max(shards, key=lambda s: len(s._pending))
+        maxload = max(len(s._pending) for s in shards)
+        floor = max(self.min_batch, maxload // 2)
+        best, best_cost = None, None
+        for s in shards:
+            if s is thief or len(s._pending) < floor:
+                continue
+            cost = self._restage_sample(s, thief, sdl)
+            # ties (incl. the all-zero case) break toward higher load,
+            # which is what makes the policy degrade to "load" gracefully
+            rank = (cost, -len(s._pending))
+            if best is None or rank < best_cost:
+                best, best_cost = s, rank
+        return best
+
+    def _restage_sample(self, victim, thief, sdl) -> float:
+        """Average restage bytes over a bounded sample of the victim's
+        newest pending-ready tasks (the ones a steal would take)."""
+        sample = victim._pending.peek(8)
+        if not sample:
+            return 0.0
+        total = 0.0
+        for task in sample:
+            if task.inputs:
+                total += sdl.restage_estimate(
+                    task.inputs, victim.shard_id, thief.shard_id)
+        return total / len(sample)
+
     def metrics(self) -> dict:
         return {
+            "victim_policy": self.victim_policy,
             "steals": self.steals,
             "tasks_stolen": self.tasks_stolen,
             "passes": self.passes,
@@ -475,6 +558,7 @@ class FederatedEngine:
                  partitioner: Callable[[str, int], int] | None = None,
                  data_layer: ShardedDataLayer | None = None,
                  stealer: WorkStealer | None = None, steal: bool = True,
+                 victim_policy: str = "load",
                  delivery_latency: float = 0.0,
                  transport: str | Callable[[], MailboxTransport]
                  | None = None,
@@ -527,7 +611,8 @@ class FederatedEngine:
                     tracer=tracer)
             for i in range(len(shards))]
         self.stealer = stealer if stealer is not None else (
-            WorkStealer(self.clock) if steal else None)
+            WorkStealer(self.clock, victim_policy=victim_policy)
+            if steal else None)
         if self.stealer is not None:
             self.stealer.attach(self)
         for i, eng in enumerate(shards):

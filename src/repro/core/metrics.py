@@ -68,6 +68,67 @@ class StreamStat:
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
+    # -- cross-process merge (DESIGN.md §14) ----------------------------
+    def snapshot(self) -> dict:
+        """Full picklable/JSON-able state — lossless up to the reservoir,
+        unlike `summary()`.  Ship it across a process boundary and rebuild
+        with `from_snapshot`, or fold it into an aggregate with `merge`."""
+        return {
+            "cap": self.cap,
+            "count": self.count,
+            "total": self.total,
+            "peak": self.peak,
+            "min": self.low,
+            "last": self.last,
+            "sample": list(self.sample),
+            "stride": self._stride,
+        }
+
+    @classmethod
+    def from_snapshot(cls, snap: dict) -> "StreamStat":
+        """Rebuild a stat from `snapshot()` output (e.g. one shipped back
+        by a federation shard process)."""
+        st = cls(cap=snap["cap"])
+        st.count = snap["count"]
+        st.total = snap["total"]
+        st.peak = snap["peak"]
+        st.low = snap["min"]
+        st.last = snap["last"]
+        st.sample = [tuple(s) for s in snap["sample"]]
+        st._stride = snap["stride"]
+        return st
+
+    def merge(self, other: "StreamStat") -> "StreamStat":
+        """Fold another stat into this one (cross-process aggregation):
+        count/total/peak/min are exact; the merged reservoir is the
+        time-sorted union of both samples, decimated back under `cap` by
+        the same drop-every-other scheme `observe` uses, so percentile
+        estimates stay within reservoir tolerance.  `last` takes the
+        merge argument's value when it has one (the caller folds shards
+        into an aggregate, so "most recently merged" is the useful
+        reading).  Returns self."""
+        if other.count == 0:
+            return self
+        self.count += other.count
+        self.total += other.total
+        if self.peak is None or (other.peak is not None
+                                 and other.peak > self.peak):
+            self.peak = other.peak
+        if self.low is None or (other.low is not None
+                                and other.low < self.low):
+            self.low = other.low
+        if other.last is not None:
+            self.last = other.last
+        merged = sorted(self.sample + list(other.sample))
+        stride = max(self._stride, other._stride)
+        while len(merged) >= self.cap:
+            del merged[1::2]
+            stride *= 2
+        self.sample = merged
+        self._stride = stride
+        self._skip = 0
+        return self
+
     def percentile(self, q: float) -> float:
         """Streaming percentile estimated from the reservoir (exact until
         the first decimation, q-quantile of a deterministic stride

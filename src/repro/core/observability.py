@@ -378,6 +378,32 @@ class Tracer:
         timeline data): bounded, one shared log across sites."""
         self.exec_spans.append((site, host, start, end, name))
 
+    def merge_snapshot(self, snap: dict) -> None:
+        """Fold another process's `snapshot()` into this tracer
+        (DESIGN.md §14): exact task counters add, the critical path takes
+        the max, and per-kind event aggregates accumulate, so a
+        `RunReport` built from the merged tracer covers the whole
+        process-per-shard federation.  Sampled spans and bounded event
+        logs are process-local and are *not* reconstructed — percentile
+        and timeline views stay per-process (each shard can export its
+        own trace); the merged report's counters and event totals are
+        exact."""
+        self.tasks_seen += snap["tasks_seen"]
+        self.tasks_done += snap["tasks_done"]
+        self.tasks_failed += snap["tasks_failed"]
+        self.tasks_retried += snap["tasks_retried"]
+        if snap["critical_path_s"] > self.critical_path_s:
+            self.critical_path_s = snap["critical_path_s"]
+        for kind, d in snap.get("events", {}).items():
+            agg = self._event_agg.get(kind)
+            if agg is None:
+                self._event_agg[kind] = agg = [0, 0.0]
+                self.events[kind] = BoundedLog(self.event_cap)
+                self._event_rates[kind] = RollingStat(self.rate_window,
+                                                      self.rate_buckets)
+            agg[0] += d["count"]
+            agg[1] += d["total"]
+
     # -- snapshots ------------------------------------------------------
     def event_counts(self) -> dict:
         return {k: {"count": a[0], "total": a[1]}

@@ -200,6 +200,16 @@ class ThreadExecutorPool:
             "run_s": self.run_stat.summary(),
         }
 
+    def stats_snapshot(self) -> dict:
+        """Picklable measured-stat state (DESIGN.md §14): a shard process
+        ships this back at shutdown and the parent folds it into one
+        federation-wide view via `StreamStat.merge`."""
+        return {
+            "tasks_run": self.tasks_run,
+            "io_s": self.io_stat.snapshot(),
+            "run_s": self.run_stat.snapshot(),
+        }
+
 
 def _run_remote(fn, args):
     """Child-process task body (module-level so it pickles)."""
@@ -347,4 +357,12 @@ class ProcessExecutorPool:
             "tasks_run": self.tasks_run,
             "io_s": self.io_stat.summary(),
             "run_s": self.run_stat.summary(),
+        }
+
+    def stats_snapshot(self) -> dict:
+        """Picklable measured-stat state (see `ThreadExecutorPool`)."""
+        return {
+            "tasks_run": self.tasks_run,
+            "io_s": self.io_stat.snapshot(),
+            "run_s": self.run_stat.snapshot(),
         }

@@ -59,6 +59,16 @@ class Clock:
         overrides this with a thread-safe, loop-waking version."""
         self.schedule(0.0, fn)
 
+    def post_many(self, fns) -> None:
+        """Enqueue an ordered batch of callbacks in one operation — the
+        bulk form of `post`, used by boundary reader threads (process
+        transports, DESIGN.md §14) that drain several messages per
+        wakeup.  The base implementation posts one by one; `RealClock`
+        overrides it with a single lock acquisition and one loop wakeup
+        for the whole batch."""
+        for fn in fns:
+            self.post(fn)
+
     def post_release(self, fn: Callable[[], None]) -> None:
         """`post(fn)` plus the release of one `hold()` token, atomically —
         used by worker pools so the loop can never observe "no holds, no
@@ -164,6 +174,11 @@ class RealClock(Clock):
     def post(self, fn: Callable[[], None]) -> None:
         with self._cond:
             self._posted.append(fn)
+            self._cond.notify()
+
+    def post_many(self, fns) -> None:
+        with self._cond:
+            self._posted.extend(fns)
             self._cond.notify()
 
     def post_release(self, fn: Callable[[], None]) -> None:

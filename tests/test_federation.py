@@ -413,3 +413,194 @@ def test_federation_beats_single_engine_when_dispatch_bound():
         return clock.now()
 
     assert single() / federated() >= 1.5
+
+
+# ---------------------------------------------------------------------------
+# process-boundary contracts (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+# Every message a ProcessFederation ships over a pipe/socket must survive
+# pickle round-trips, the in-process QueueTransport must count sends
+# correctly under producer-thread contention, StreamStat snapshots must
+# merge losslessly (child pool telemetry folds into the driver), and the
+# directory victim policy must prefer victims whose in-flight inputs are
+# cheap to restage.
+
+import pickle
+import threading
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (QueueTransport, RealClock, StreamStat, TaskFailure)
+from repro.core.procfed import Ref, body_scale
+
+
+def _sample_envelope(fid=7):
+    # the submit/stolen task envelope: (fid, name, fn, args, duration,
+    # app, key, ((input name, size), ...)) — args may embed Refs
+    return (fid, "analyze", body_scale, [Ref(3), 2.0], 0.1, None,
+            "an_m0_k1", (("arch.tar", 4e6),))
+
+
+BOUNDARY_MESSAGES = [
+    # parent -> child
+    ("submit", [_sample_envelope()]),
+    ("resolve", [(3, True, 41.0),
+                 (4, False, TaskFailure("boom", kind="host", latency=0.2))]),
+    ("steal", 1, 8),
+    ("drop", [3, 4]),
+    ("shutdown",),
+    # child -> parent
+    ("ready", 1),
+    ("done", [(7, True, {"x": 1}), (8, False, ValueError("bad"))], 2, 1),
+    ("dir", [("add", "arch.tar"), ("drop", "old.tar")]),
+    ("stolen", 5, [_sample_envelope(9)], 4),
+    ("load", 3, 2),
+    ("stats", {"tasks_run": 5, "io_s": StreamStat(cap=16).snapshot()}),
+]
+
+
+@pytest.mark.parametrize("msg", BOUNDARY_MESSAGES, ids=lambda m: m[0])
+def test_boundary_message_pickles(msg):
+    out = pickle.loads(pickle.dumps(msg))
+    assert out[0] == msg[0]
+    if msg[0] in ("submit", "stolen"):
+        env = (out[1] if msg[0] == "submit" else out[2])[0]
+        src = (msg[1] if msg[0] == "submit" else msg[2])[0]
+        assert env[0] == src[0] and env[6] == src[6]
+        assert env[2] is body_scale          # fn restored by reference
+        assert env[3][0] == Ref(3)           # Ref arg round-trips
+        assert env[7] == src[7]
+    elif msg[0] == "resolve":
+        assert out[1][0] == msg[1][0]
+        err = out[1][1][2]
+        assert isinstance(err, TaskFailure)
+        assert err.kind == "host" and err.latency == 0.2   # __reduce__
+        assert str(err) == "boom"
+    elif msg[0] == "done":
+        assert isinstance(out[1][1][2], ValueError)
+        assert out[1][0] == msg[1][0] and out[2:] == msg[2:]
+    else:
+        assert out == msg
+
+
+def test_ref_is_pickle_stable_and_hashable():
+    r = pickle.loads(pickle.dumps(Ref(42)))
+    assert r == Ref(42) and hash(r) == hash(Ref(42))
+    assert r != Ref(43) and "42" in repr(r)
+
+
+def test_queue_transport_counts_sends_under_contention():
+    """`sends` is bumped under the transport lock: 8 producer threads
+    racing 50 sends each must lose none, and delivery stays coalesced
+    (drains is counted per burst, not per message)."""
+    clock = RealClock()
+    t = QueueTransport()
+    got = []
+    t.bind(clock, got.extend)
+    clock.hold()
+    threads = [threading.Thread(
+        target=lambda: [t.send(("m", i)) for i in range(50)])
+        for _ in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    clock.post(clock.release)     # runs after every posted drain
+    clock.run()
+    assert t.sends == 400
+    assert len(got) == 400
+    assert 1 <= t.drains <= t.sends
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e6),
+                min_size=0, max_size=120),
+       st.lists(st.floats(min_value=0.0, max_value=1e6),
+                min_size=0, max_size=120))
+def test_streamstat_merge_matches_sequential(xs, ys):
+    """merge(from_snapshot(a), from_snapshot(b)) preserves the exact
+    moments (count/total/peak/min) of the concatenated stream and keeps
+    the reservoir bounded with in-range percentiles — the driver-side
+    fold for child pool telemetry."""
+    a, b = StreamStat(cap=32), StreamStat(cap=32)
+    for i, v in enumerate(xs):
+        a.observe(float(i), v)
+    for i, v in enumerate(ys):
+        b.observe(float(len(xs) + i), v)
+    merged = StreamStat.from_snapshot(a.snapshot()) \
+        .merge(StreamStat.from_snapshot(b.snapshot()))
+    allv = xs + ys
+    assert merged.count == len(allv)
+    assert merged.total == pytest.approx(sum(allv))
+    if allv:
+        assert merged.peak == max(allv) and merged.low == min(allv)
+        assert min(allv) <= merged.percentile(0.5) <= max(allv)
+    assert len(merged.sample) < merged.cap
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e3),
+                min_size=1, max_size=80))
+def test_streamstat_snapshot_roundtrip(xs):
+    s = StreamStat(cap=16)
+    for i, v in enumerate(xs):
+        s.observe(float(i), v)
+    snap = s.snapshot()
+    assert StreamStat.from_snapshot(snap).snapshot() == snap
+
+
+def test_directory_victim_policy_prefers_cheap_victims():
+    """At comparable load, the directory policy steals from the victim
+    whose sampled in-flight inputs the thief already holds; the load
+    policy takes the longest queue regardless of restage cost."""
+    from types import SimpleNamespace
+
+    sdl = ShardedDataLayer(3, cache_capacity=1e9)
+    x, y = DataObject("x.dat", 10e6), DataObject("y.dat", 10e6)
+    sdl.directory.add("x.dat", 0)     # only the loaded victim holds x
+    sdl.directory.add("y.dat", 1)
+    sdl.directory.add("y.dat", 2)     # ...but the thief already holds y
+
+    class _Queue(list):
+        def peek(self, n):
+            return list(self[:n])
+
+    t_x = SimpleNamespace(inputs=(x,))
+    t_y = SimpleNamespace(inputs=(y,))
+    v_a = SimpleNamespace(shard_id=0, _pending=_Queue([t_x] * 10))
+    v_b = SimpleNamespace(shard_id=1, _pending=_Queue([t_y] * 9))
+    thief = SimpleNamespace(shard_id=2, _pending=_Queue())
+
+    load = WorkStealer(SimClock(), min_batch=1, victim_policy="load")
+    directory = WorkStealer(SimClock(), min_batch=1,
+                            victim_policy="directory")
+    assert load._pick_victim([v_a, v_b, thief], thief, sdl) is v_a
+    assert directory._pick_victim([v_a, v_b, thief], thief, sdl) is v_b
+    assert directory.metrics()["victim_policy"] == "directory"
+
+
+def test_federated_engine_victim_policy_end_to_end():
+    """`FederatedEngine(victim_policy="directory")` completes a skewed
+    warm workload and never estimates more restage than the load policy
+    on the identical (deterministic) run."""
+    def probe(policy):
+        sdl = ShardedDataLayer(4, cache_capacity=400e6)
+        clock, fed, _ = _federation(n_shards=4, execs=4, data_layer=sdl,
+                                    partitioner=skewed_partitioner(0.8))
+        fed.stealer = WorkStealer(clock, victim_policy=policy)
+        fed.stealer.attach(fed)
+        wf = Workflow("t", fed)
+        files = [sdl.shared.file(f"f{i}.dat", 50e6) for i in range(8)]
+        proc = wf.sim_proc("p", duration=0.5,
+                           inputs=lambda i: (files[i % 8],))
+        out = wf.foreach(list(range(300)), lambda i: proc(i))
+        fed.run()
+        assert out.resolved
+        st = fed.metrics()["stealer"]
+        assert st["victim_policy"] == policy
+        return st
+
+    load = probe("load")
+    directory = probe("directory")
+    assert load["tasks_stolen"] > 0 and directory["tasks_stolen"] > 0
+    assert directory["restage_bytes_est"] <= load["restage_bytes_est"]
