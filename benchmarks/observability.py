@@ -8,7 +8,11 @@ Two claims are gated here:
     tracer, and a counter bump plus O(1) critical-path update per
     non-sampled task with one.  The same gate covers a tracer + health
     monitor run (DESIGN.md §13: one dict probe, strided turnaround
-    sampling, counter-delta error windows off the completion path).
+    sampling, counter-delta error windows off the completion path) and a
+    *journaled* run (DESIGN.md §15: a sqlite-backed `JobStore` journal on
+    the same hooks — terminal durability buffers one row per completion
+    and hands batches to a background writer thread, so the clock thread
+    never touches sqlite).
     Measured best-of-N across fresh interpreters so the assertion is
     robust to per-process layout bias as well as timer noise;
     ``OBS_OVERHEAD_TASKS`` scales the task count (default 100,000).
@@ -39,12 +43,18 @@ from benchmarks.million_tasks import build_workload
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _measure_once(n_tasks: int, traced: bool,
-                  monitored: bool = False) -> tuple[float, object]:
+def _measure_once(n_tasks: int, traced: bool, monitored: bool = False,
+                  journaled: bool = False) -> tuple[float, object]:
     """One untimed-build + timed-run of the MolDyn-shaped workload;
     returns (run wall seconds, tracer or None).  With ``monitored`` a
     `HealthMonitor` watches the engine and service on top of the tracer
-    (no sink, no faults — the hot-path hook cost is what's measured)."""
+    (no sink, no faults — the hot-path hook cost is what's measured).
+    With ``journaled`` the engine journals into a throwaway `JobStore`
+    (terminal durability, default batch) — the timed region covers the
+    hooks and batch hand-offs; the background writer's fsyncs overlap
+    the run and are drained outside the timer."""
+    import tempfile
+
     eng, svc = falkon_engine(executors=512, alloc_latency=81.0,
                              engine_kwargs={"provenance": "summary"})
     tracer = None
@@ -55,6 +65,12 @@ def _measure_once(n_tasks: int, traced: bool,
         hm = HealthMonitor(eng.clock, tracer=tracer)
         hm.watch(eng)
         hm.watch_service(svc)
+    store = store_dir = None
+    if journaled:
+        from repro.core import JobStore
+        store_dir = tempfile.mkdtemp(prefix="obs_journal_")
+        store = JobStore(os.path.join(store_dir, "journal.db"))
+        eng.journal = store.journal(default_wf="bench")
     n, out = build_workload(eng, n_tasks, job_s=168.0)
     # the comparison measures the tracing hooks, not collector scheduling:
     # without this, the previous run's graph teardown lands as cycle-GC
@@ -70,22 +86,30 @@ def _measure_once(n_tasks: int, traced: bool,
     assert out.resolved and eng.tasks_completed == n
     if traced:
         assert tracer.tasks_seen == n and tracer.tasks_done == n
+    if journaled:
+        import shutil
+        eng.journal.flush()
+        store.sync()
+        assert JobStore.peek(store.path, "bench")["done"] == n
+        store.close()
+        shutil.rmtree(store_dir, ignore_errors=True)
     return wall, tracer
 
 
-_MODES = (("off", False, False), ("traced", True, False),
-          ("monitored", True, True))
+_MODES = (("off", False, False, False), ("traced", True, False, False),
+          ("monitored", True, True, False),
+          ("journaled", False, False, True))
 
 
 def _measure_subprocess(n_tasks: int, rounds: int, flip: bool) -> None:
-    """``--measure`` child entry point: run all three modes back to back
+    """``--measure`` child entry point: run all four modes back to back
     `rounds` times in this fresh interpreter and print one JSON line
     mapping each mode to its best wall."""
-    best = {name: float("inf") for name, _, _ in _MODES}
+    best = {name: float("inf") for name, *_ in _MODES}
     for rep in range(rounds):
         order = _MODES if (rep % 2 == 0) != flip else _MODES[::-1]
-        for name, traced, monitored in order:
-            wall, _tr = _measure_once(n_tasks, traced, monitored)
+        for name, traced, monitored, journaled in order:
+            wall, _tr = _measure_once(n_tasks, traced, monitored, journaled)
             best[name] = min(best[name], wall)
     print(json.dumps({m: round(w, 6) for m, w in best.items()}))
 
@@ -113,8 +137,9 @@ def measure_overhead(n_tasks: int, procs: int = 6,
     env["PYTHONPATH"] = os.pathsep.join([
         os.path.join(_ROOT, "src"), _ROOT,
         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
-    ratios: dict[str, list] = {"traced": [], "monitored": []}
-    walls: dict[str, list] = {name: [] for name, _, _ in _MODES}
+    ratios: dict[str, list] = {"traced": [], "monitored": [],
+                               "journaled": []}
+    walls: dict[str, list] = {name: [] for name, *_ in _MODES}
     for k in range(procs):
         out = subprocess.run(
             [sys.executable, "-m", "benchmarks.observability",
@@ -126,6 +151,7 @@ def measure_overhead(n_tasks: int, procs: int = 6,
             walls[name].append(best[name])
         ratios["traced"].append(best["traced"] / best["off"] - 1.0)
         ratios["monitored"].append(best["monitored"] / best["off"] - 1.0)
+        ratios["journaled"].append(best["journaled"] / best["off"] - 1.0)
 
     # boundedness: caps hold no matter the task count (one in-process
     # traced run just for the snapshot — its wall is not part of the gate)
@@ -141,13 +167,18 @@ def measure_overhead(n_tasks: int, procs: int = 6,
         "untraced_s": round(min(walls["off"]), 3),
         "traced_s": round(min(walls["traced"]), 3),
         "monitored_s": round(min(walls["monitored"]), 3),
+        "journaled_s": round(min(walls["journaled"]), 3),
         "overhead_pct": round(100.0 * min(ratios["traced"]), 2),
         "monitored_overhead_pct": round(
             100.0 * min(ratios["monitored"]), 2),
+        "journaled_overhead_pct": round(
+            100.0 * min(ratios["journaled"]), 2),
         "proc_overheads_pct": [round(100.0 * r, 2)
                                for r in ratios["traced"]],
         "proc_monitored_pct": [round(100.0 * r, 2)
                                for r in ratios["monitored"]],
+        "proc_journaled_pct": [round(100.0 * r, 2)
+                               for r in ratios["journaled"]],
         "sampled_spans": snap["sampled_spans"],
         "sample_stride": snap["sample_stride"],
         "max_spans": tracer.max_spans,
@@ -191,10 +222,12 @@ def write_sample_trace(path: str | None = None) -> str:
 def run() -> list[dict]:
     n_tasks = int(os.environ.get("OBS_OVERHEAD_TASKS", "100000"))
     r = measure_overhead(n_tasks)
-    # acceptance gates: <= 5% throughput cost (best paired round), both
-    # for the tracer alone and for tracer + health monitor (DESIGN.md §13)
+    # acceptance gates: <= 5% throughput cost (best paired round) for the
+    # tracer alone, for tracer + health monitor (DESIGN.md §13), and for
+    # the JobStore journal (DESIGN.md §15)
     assert r["overhead_pct"] <= 5.0, r
     assert r["monitored_overhead_pct"] <= 5.0, r
+    assert r["journaled_overhead_pct"] <= 5.0, r
 
     sample_path = write_sample_trace()
     trace, report = build_sample_trace()
@@ -204,7 +237,8 @@ def run() -> list[dict]:
         "name": f"observability.overhead.{n_tasks // 1000}k",
         "us_per_call": 1e6 * r["traced_s"] / r["tasks"],
         "derived": (f"{r['overhead_pct']:+.1f}% traced, "
-                    f"{r['monitored_overhead_pct']:+.1f}% monitored vs "
+                    f"{r['monitored_overhead_pct']:+.1f}% monitored, "
+                    f"{r['journaled_overhead_pct']:+.1f}% journaled vs "
                     f"untraced ({r['sampled_spans']} spans kept, "
                     f"stride {r['sample_stride']})"),
     }, {

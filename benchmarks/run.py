@@ -41,6 +41,7 @@ MODULES = [
     "benchmarks.observability",        # §12: tracing overhead + sample trace
     "benchmarks.health_recovery",      # §13: monitored recovery vs blind
     "benchmarks.real_federation",      # §14: process-per-shard dispatchers
+    "benchmarks.kill_resume",          # §15: SIGKILL + resume re-run bound
 ]
 
 

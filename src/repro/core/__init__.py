@@ -28,6 +28,8 @@ from repro.core.futures import (CompletionCounter, DataFuture, resolved,
                                 when_all)
 from repro.core.health import (METRICS_STREAM_SCHEMA, HealthConfig,
                                HealthMonitor, RollingStat)
+from repro.core.jobstore import (IllegalTransition, JobStore, Journal,
+                                 TaskStateMachine, WorkflowState)
 from repro.core.metrics import StreamStat
 from repro.core.observability import (BoundedLog, MetricsRegistry, RunReport,
                                       Span, Tracer, build_report)
@@ -39,6 +41,8 @@ from repro.core.providers import (BatchSchedulerProvider, ClusteringProvider,
                                   WorkerPoolProvider)
 from repro.core.realpool import ProcessExecutorPool, ThreadExecutorPool
 from repro.core.restart_log import RestartLog
+from repro.core.service import (ResumeView, WorkflowHandle,
+                                WorkflowService)
 from repro.core.simclock import RealClock, SimClock
 from repro.core.sites import LoadBalancer, Site
 from repro.core.task import Task, task_key
@@ -58,6 +62,8 @@ __all__ = [
     "DataFuture", "CompletionCounter", "resolved", "when_all",
     "SimClock", "RealClock",
     "RestartLog", "FaultInjector", "RetryPolicy", "TaskFailure",
+    "JobStore", "Journal", "TaskStateMachine", "IllegalTransition",
+    "WorkflowState", "WorkflowService", "WorkflowHandle", "ResumeView",
     "VDC", "InvocationRecord", "LoadBalancer", "Site", "StreamStat",
     "Tracer", "Span", "BoundedLog", "MetricsRegistry", "RunReport",
     "build_report",

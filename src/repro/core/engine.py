@@ -177,6 +177,19 @@ class Engine:
         self.vdc = vdc or VDC()
         self.restart_log = restart_log
         self.fault_injector = fault_injector
+        # durability (DESIGN.md §15): set to a `jobstore.Journal` (usually
+        # by `WorkflowService`) to record every task's status transitions
+        # through the explicit state machine into the sqlite store.  None
+        # keeps each hook to a single attribute test, like tracer/health.
+        self.journal = None
+        # multi-tenant fair share (DESIGN.md §15): when True, the pending
+        # drain interleaves app buckets by stride scheduling (weights from
+        # `app_shares`, default 1) instead of first-arrival bucket order,
+        # so one app's standing backlog cannot starve later arrivals.
+        self.fair_share = False
+        self.app_shares: dict = {}
+        self._fair_pass: dict = {}
+        self._fair_vt = 0.0
         # duration prediction (DESIGN.md §11): when a predictor (e.g.
         # `repro.launch.hlo_cost.DurationPredictor`) is attached, tasks
         # with a callable and no explicit `duration=` are priced from
@@ -255,11 +268,15 @@ class Engine:
         args = args or []
         out = DataFuture(name=name)
         if key is None:
-            # dataflow-stable keys are only needed for restart-log lookups;
-            # skip the fingerprint hash on the hot path otherwise, and in
-            # summary-provenance mode (no stored records reference the key)
-            # skip even the counter suffix
-            if self.restart_log is not None:
+            # dataflow-stable keys are only needed for restart-log lookups
+            # and journaling; skip the fingerprint hash on the hot path
+            # otherwise, and in summary-provenance mode (no stored records
+            # reference the key) skip even the counter suffix
+            if self.journal is not None:
+                # the store's primary key is (wf, key): duplicate content
+                # keys get a deterministic occurrence suffix
+                key = self.journal.unique_key(task_key(name, args))
+            elif self.restart_log is not None:
                 key = task_key(name, args)
             elif self._prov_records:
                 key = f"{name}#{self.tasks_submitted}"
@@ -285,6 +302,11 @@ class Engine:
                     self.retry_policy.max_retries, durable, key,
                     inputs=inputs)
         task.created_time = self.clock.now()
+        j = self.journal
+        if j is not None and j.full:
+            # terminal durability records completions only — the
+            # non-terminal transitions never leave the clock thread
+            j.task_submitted(key)
         task.vmap_key = vmap_key
         tr = self.tracer
         if tr is not None:
@@ -398,6 +420,8 @@ class Engine:
                     task.output.set_error(
                         TaskFailure(f"upstream failure for {task.name}"))
                     self.tasks_failed += 1
+                    if self.journal is not None:
+                        self.journal.task_failed(task.key, "upstream failure")
                     task.args = ()
                     return
         else:
@@ -413,6 +437,9 @@ class Engine:
                             TaskFailure(f"upstream failure for {task.name}"))
                         self.tasks_failed += 1
                         tr.task_done(task, self.clock.now(), "failed")
+                        if self.journal is not None:
+                            self.journal.task_failed(task.key,
+                                                     "upstream failure")
                         task.args = ()
                         return
                     p = a.path
@@ -442,6 +469,9 @@ class Engine:
         self._dispatch(task)
 
     def _dispatch(self, task: Task, exclude_site: str | None = None):
+        j = self.journal
+        if j is not None and j.full:
+            j.task_ready(task.key)
         if not self._place(task, exclude_site):
             # every valid site is at its throttle: hold in the ready queue
             self._pending.append((task, exclude_site))
@@ -457,15 +487,20 @@ class Engine:
             self.tasks_failed += 1
             if self.tracer is not None:
                 self.tracer.task_done(task, self.clock.now(), "failed")
+            if self.journal is not None:
+                self.journal.task_failed(task.key, "no site")
             return True  # consumed (failed), not held
         now = self.clock.now()
         # throttle only matters when there is a choice to steer: with a
         # single site the provider's own queue is the right place to wait —
         # unless this engine is a federation shard (`_hold_excess`), where
-        # excess ready work stays in `_pending` so it can be stolen
+        # excess ready work stays in `_pending` so it can be stolen, or
+        # fair share is on (§15), where the stride drain must own the
+        # ordering of everything not yet running
         site = self.balancer.pick(task.app, now,
                                   require_room=(len(cands) > 1
-                                                or self._hold_excess),
+                                                or self._hold_excess
+                                                or self.fair_share),
                                   slack=self.site_slack,
                                   inputs=task.inputs or None)
         if site is None:
@@ -477,6 +512,9 @@ class Engine:
                     break
         task.site = site
         task.submit_time = now
+        j = self.journal
+        if j is not None and j.full:
+            j.task_dispatched(task.key)
         site.outstanding += 1
         if self.balancer.duration_aware:
             site.outstanding_work += sim_duration(task)
@@ -504,12 +542,53 @@ class Engine:
         are full is skipped at its bucket head, its backlog untouched."""
         self._drain_scheduled = False
         pending = self._pending
+        if self.fair_share and len(pending._buckets) > 1:
+            self._drain_fair(pending)
+            return
         for app, bucket in pending.buckets():
             while bucket:
                 task, excl = bucket[0]
                 if not self._place(task, excl):
                     break              # app blocked; leave its backlog be
                 pending.pop_head(app)
+
+    def _drain_fair(self, pending: ReadyQueue):
+        """Stride-scheduled drain (DESIGN.md §15): each placement goes to
+        the app with the smallest virtual *pass*, which then advances by
+        1/share.  Per-app pass values persist across drains, so even when
+        completions free one slot at a time the long-run placement ratio
+        between backlogged apps converges to their `app_shares` weights —
+        the first-arrival bucket order of the default drain would hand
+        every freed slot to the oldest app until its backlog drained
+        (the starved-app case in `tests/test_service.py`)."""
+        passes = self._fair_pass
+        shares = self.app_shares
+        vt = self._fair_vt
+        blocked: set = set()
+        buckets = pending._buckets
+        while True:
+            best = None
+            best_pass = 0.0
+            for app, bucket in buckets.items():
+                if app in blocked or not bucket:
+                    continue
+                p = passes.get(app)
+                if p is None or p < vt:
+                    # joining (or rejoining after idle) apps start at the
+                    # current virtual time: an idle period banks no credit
+                    passes[app] = p = vt
+                if best is None or p < best_pass:
+                    best, best_pass = app, p
+            if best is None:
+                break
+            task, excl = buckets[best][0]
+            if not self._place(task, excl):
+                blocked.add(best)
+                continue
+            pending.pop_head(best)
+            vt = best_pass
+            passes[best] = best_pass + 1.0 / shares.get(best, 1.0)
+        self._fair_vt = vt
 
     def _done(self, task: Task, ok: bool, value, err):
         site = task.site
@@ -550,6 +629,8 @@ class Engine:
             self._record(task, "ok")
             if self.restart_log is not None and task.durable:
                 self.restart_log.append(task.key, value)
+            if self.journal is not None:
+                self.journal.task_done(task.key, value)
             tr = self.tracer
             if tr is not None:
                 # inlined Tracer.task_done: stamp the output's critical-path
@@ -577,6 +658,8 @@ class Engine:
                 self.health.task_revoked(task)
             if self.tracer is not None:
                 self.tracer.event("revoked", now)
+            if self.journal is not None and self.journal.full:
+                self.journal.task_revoked(task.key)
             self._dispatch(task, exclude_site=site.name)
             return
         site.on_failure()
@@ -597,6 +680,8 @@ class Engine:
                 task.output.path = path
         if task.retries_left <= 0:
             self.tasks_failed += 1
+            if self.journal is not None:
+                self.journal.task_failed(task.key, str(err))
             task.args = ()
             task.fault_check = None
             task.output.set_error(err or TaskFailure(f"{task.name} failed"))

@@ -244,6 +244,10 @@ class Tracer:
         # component events: kind -> exact [count, value_total] + bounded log
         self._event_agg: dict[str, list] = {}
         self.events: dict[str, BoundedLog] = {}
+        # named gauges: last-value-wins scalars for state that is a level,
+        # not a stream — recovery counters (``tasks_restored``,
+        # ``recovery_wall_s``), journal depth, etc. (DESIGN.md §15)
+        self.gauges: dict[str, float] = {}
         # executor occupancy track: (site, host, start, end, name)
         self.exec_spans = BoundedLog(cap=max(log_cap, 2))
         # named raw-series logs (Falkon queue length / allocations live
@@ -372,6 +376,13 @@ class Tracer:
             for fn in self._subs:
                 fn(kind, t, value)
 
+    def gauge(self, name: str, value: float) -> None:
+        """Set a named gauge (last value wins).  Gauges appear in
+        `snapshot()` and in the `RunReport` payload; on `merge_snapshot`
+        they *sum* across processes (every current user is an additive
+        count — restored tasks, journal rows)."""
+        self.gauges[name] = float(value)
+
     def exec_span(self, site: str, host: str, start: float, end: float,
                   name: str = "") -> None:
         """Record one executor-occupancy interval (the Fig-18 / worker
@@ -403,6 +414,8 @@ class Tracer:
                                                       self.rate_buckets)
             agg[0] += d["count"]
             agg[1] += d["total"]
+        for name, v in snap.get("gauges", {}).items():
+            self.gauges[name] = self.gauges.get(name, 0.0) + v
 
     # -- snapshots ------------------------------------------------------
     def event_counts(self) -> dict:
@@ -456,6 +469,7 @@ class Tracer:
             "sample_stride": self.sample_every * self._stride,
             "events": self.event_counts(),
             "event_rates": self.event_rates(),
+            "gauges": dict(self.gauges),
         }
 
     # -- chrome trace export --------------------------------------------
@@ -745,6 +759,7 @@ def build_report(tracer: Tracer, registry: MetricsRegistry | None = None,
         "utilization": {"bins": bins, "bin_s": width,
                         "sites": {k: sites[k] for k in sorted(sites)}},
         "events": tracer.event_counts(),
+        "gauges": dict(tracer.gauges),
         "components": registry.snapshot() if registry is not None else {},
     }
     return RunReport(payload)

@@ -54,7 +54,7 @@ from repro.core.datastore import (DataLayer, ShardDirectory, SharedStore,
                                   StagingCostModel, inputs_of)
 from repro.core.engine import Engine
 from repro.core.falkon import DRPConfig, FalkonConfig, FalkonService
-from repro.core.faults import TaskFailure
+from repro.core.faults import RetryPolicy, TaskFailure
 from repro.core.federation import Mailbox, MailboxTransport, hash_partitioner
 from repro.core.futures import DataFuture
 from repro.core.metrics import StreamStat
@@ -589,7 +589,8 @@ class ProcessFederation:
                  steal: bool = True, victim_policy: str = "load",
                  min_batch: int = 2, max_batch: int = 4096,
                  transport: str = "pipe", tracer: Tracer | None = None,
-                 mp_context: str = "spawn"):
+                 mp_context: str = "spawn",
+                 retry_policy: RetryPolicy | None = None):
         if n_shards < 1:
             raise ValueError("need at least one shard")
         if victim_policy not in ("load", "directory"):
@@ -619,6 +620,15 @@ class ProcessFederation:
         self.cross_shard_edges = 0
         self._futs: dict[int, DataFuture] = {}       # fid -> driver future
         self._fid_shard: dict[int, int] = {}         # fid -> owning shard
+        # shard-death failover (DESIGN.md §14/§15): with a retry budget,
+        # tasks lost to a dead shard are re-encoded from their retained
+        # raw submit context and re-routed to a surviving shard instead
+        # of failing the workflow.  `max_retries=0` restores fail-fast
+        # (and skips the retention entirely — no extra memory).
+        self.retry_policy = retry_policy or RetryPolicy()
+        self._raw: dict[int, tuple] = {}             # fid -> submit context
+        self._retries: dict[int, int] = {}           # fid -> failovers used
+        self.tasks_failed_over = 0
         self._fwd: dict[int, set[int]] = {}          # fid -> Ref'd shards
         self._inflight_inputs = [dict() for _ in range(n_shards)]
         self._dir = ShardDirectory()                 # parent replica
@@ -771,14 +781,36 @@ class ProcessFederation:
             out.set_error(TaskFailure("no live shard", kind="host"))
             return out
         fid = out.id
+        enc, failed_up = self._encode_args(args, shard)
+        if failed_up is not None:
+            self._failed += 1
+            out.set_error(failed_up)
+            return out
+        env = (fid, name, fn, enc, duration, app, key,
+               tuple((o.name, o.size) for o in tin))
+        self._futs[fid] = out
+        self._fid_shard[fid] = shard
+        if self.retry_policy.max_retries > 0:
+            # retain the raw submit context (live future args included) so
+            # a shard death can re-encode against the survivors' view
+            self._raw[fid] = (name, fn, args, duration, app, key, tin)
+        if tin:
+            self._inflight_inputs[shard][fid] = env[7]
+        self.clock.hold()
+        self._ob_submit[shard].append(env)
+        self._schedule_flush(shard)
+        return out
+
+    def _encode_args(self, args: list, shard: int):
+        """Encode call args for the wire: resolved futures inline their
+        value, pending futures become `Ref` markers with a resolve
+        forward registered toward `shard`.  Returns (enc, failed_up)."""
         enc = []
-        failed_up = None
         for a in args:
             if isinstance(a, DataFuture):
                 if a.done:
                     if a.failed:
-                        failed_up = a._error
-                        break
+                        return None, a._error
                     enc.append(a.get())
                 else:
                     tgt = self._fwd.get(a.id)
@@ -792,20 +824,7 @@ class ProcessFederation:
                     enc.append(Ref(a.id))
             else:
                 enc.append(a)
-        if failed_up is not None:
-            self._failed += 1
-            out.set_error(failed_up)
-            return out
-        env = (fid, name, fn, enc, duration, app, key,
-               tuple((o.name, o.size) for o in tin))
-        self._futs[fid] = out
-        self._fid_shard[fid] = shard
-        if tin:
-            self._inflight_inputs[shard][fid] = env[7]
-        self.clock.hold()
-        self._ob_submit[shard].append(env)
-        self._schedule_flush(shard)
-        return out
+        return enc, None
 
     def _route(self, shard: int) -> int | None:
         """Remap a partition target off dead shards, deterministically."""
@@ -867,6 +886,8 @@ class ProcessFederation:
         for fid, ok, payload in batch:
             fut = self._futs.pop(fid, None)
             owner = self._fid_shard.pop(fid, sid)
+            self._raw.pop(fid, None)
+            self._retries.pop(fid, None)
             self._inflight_inputs[owner].pop(fid, None)
             if fut is None:
                 continue
@@ -965,6 +986,8 @@ class ProcessFederation:
             for env in envs:
                 fut = self._futs.pop(env[0], None)
                 self._fid_shard.pop(env[0], None)
+                self._raw.pop(env[0], None)
+                self._retries.pop(env[0], None)
                 if fut is not None and not fut.done:
                     self._failed += 1
                     fut.set_error(TaskFailure("no live shard for stolen "
@@ -1023,15 +1046,29 @@ class ProcessFederation:
             t.close()
         self.tracer.event("shard_death", self.clock.now(), 1.0)
         doomed = [fid for fid, s in self._fid_shard.items() if s == sid]
+        failed_over = 0
         for fid in doomed:
+            # failover first (DESIGN.md §14): within the retry budget and
+            # with a surviving shard, re-encode the retained submit context
+            # and re-route — the driver future (and its dependents' Refs)
+            # carries over; the clock hold from submit stays outstanding.
+            if self._resubmit(fid, sid):
+                failed_over += 1
+                continue
             fut = self._futs.pop(fid, None)
             self._fid_shard.pop(fid, None)
+            self._raw.pop(fid, None)
+            self._retries.pop(fid, None)
             if fut is not None and not fut.done:
                 self._failed += 1
                 fut.set_error(TaskFailure(
                     f"shard {sid} process died with task in flight",
                     kind="host"))
                 self.clock.release()
+        if failed_over:
+            self.tasks_failed_over += failed_over
+            self.tracer.event("task_failover", self.clock.now(),
+                              float(failed_over))
         self._inflight_inputs[sid].clear()
         for req, (victim, thief) in list(self._steal_reqs.items()):
             if victim == sid or thief == sid:
@@ -1044,6 +1081,47 @@ class ProcessFederation:
         self._load[sid] = (0, 0)
         self._check_ready()
         self._maybe_steal()
+
+    def _resubmit(self, fid: int, dead_sid: int) -> bool:
+        """Driver-side re-submission of a task lost to a dead shard,
+        bounded by ``retry_policy.max_retries``.  Returns True when the
+        task was re-routed; False means the caller should fail it fast
+        (no retained context, budget exhausted, no survivor, or an
+        upstream dependency has itself failed)."""
+        raw = self._raw.get(fid)
+        if raw is None:
+            return False
+        used = self._retries.get(fid, 0)
+        if used >= self.retry_policy.max_retries:
+            return False
+        fut = self._futs.get(fid)
+        if fut is None or fut.done:
+            return False
+        target = self._route(dead_sid)
+        if target is None:
+            return False
+        name, fn, args, duration, app, key, tin = raw
+        enc, failed_up = self._encode_args(args, target)
+        if failed_up is not None:
+            # an upstream failed while this task sat on the dead shard:
+            # surface that error, as the shard itself would have
+            self._futs.pop(fid, None)
+            self._fid_shard.pop(fid, None)
+            self._raw.pop(fid, None)
+            self._retries.pop(fid, None)
+            self._failed += 1
+            fut.set_error(failed_up)
+            self.clock.release()
+            return True  # handled: do not also fail with kind="host"
+        self._retries[fid] = used + 1
+        self._fid_shard[fid] = target
+        env = (fid, name, fn, enc, duration, app, key,
+               tuple((o.name, o.size) for o in tin))
+        if tin:
+            self._inflight_inputs[target][fid] = env[7]
+        self._ob_submit[target].append(env)
+        self._schedule_flush(target)
+        return True
 
     # -- run / shutdown ---------------------------------------------------
     def _check_ready(self) -> None:
@@ -1125,6 +1203,7 @@ class ProcessFederation:
             "shards": self.n_shards,
             "per_shard_completed": list(self._per_shard_completed),
             "cross_shard_edges": self.cross_shard_edges,
+            "failed_over": self.tasks_failed_over,
             "makespan": self.clock.now(),
         }
 
@@ -1146,6 +1225,7 @@ class ProcessFederation:
             "submitted": self.tasks_submitted,
             "completed": self._completed,
             "failed": self._failed,
+            "failed_over": self.tasks_failed_over,
             "cross_shard_edges": self.cross_shard_edges,
             "stealer": {
                 "victim_policy": self.victim_policy,

@@ -21,36 +21,43 @@ from typing import Any, Tuple
 from repro.core.xdtm import PhysicalRef
 
 
-def _encode(value: Any):
+def encode_value(value: Any):
+    """JSON-encodable form of a task value: `PhysicalRef`s become tagged
+    dicts, containers recurse, scalars pass through.  Shared by
+    `RestartLog` and the sqlite `JobStore` so both durability layers
+    agree on what a persisted value means."""
     if isinstance(value, PhysicalRef):
         return {"__ref__": value.path, "meta": list(value.meta)}
     if isinstance(value, (list, tuple)):
-        return [_encode(v) for v in value]
+        return [encode_value(v) for v in value]
     if isinstance(value, dict):
-        return {k: _encode(v) for k, v in value.items()}
+        return {k: encode_value(v) for k, v in value.items()}
     return value
 
 
-def _decode(value: Any):
+def decode_value(value: Any):
+    """Inverse of `encode_value` (tagged dicts back to `PhysicalRef`s)."""
     if isinstance(value, dict) and "__ref__" in value:
         return PhysicalRef(value["__ref__"], tuple(value.get("meta", ())))
     if isinstance(value, list):
-        return [_decode(v) for v in value]
+        return [decode_value(v) for v in value]
     if isinstance(value, dict):
-        return {k: _decode(v) for k, v in value.items()}
+        return {k: decode_value(v) for k, v in value.items()}
     return value
 
 
-def _refs(value: Any) -> list[PhysicalRef]:
+def physical_refs(value: Any) -> list[PhysicalRef]:
+    """Every `PhysicalRef` reachable inside a value — resume only honors
+    an entry if all of them still exist on disk."""
     out = []
     if isinstance(value, PhysicalRef):
         out.append(value)
     elif isinstance(value, (list, tuple)):
         for v in value:
-            out.extend(_refs(v))
+            out.extend(physical_refs(v))
     elif isinstance(value, dict):
         for v in value.values():
-            out.extend(_refs(v))
+            out.extend(physical_refs(v))
     return out
 
 
@@ -79,11 +86,11 @@ class RestartLog:
                     if not line.strip():
                         continue
                     rec = json.loads(line)
-                    self._log[rec["key"]] = _decode(rec["value"])
+                    self._log[rec["key"]] = decode_value(rec["value"])
 
     def append(self, key: str, value: Any) -> None:
         try:
-            enc = _encode(value)
+            enc = encode_value(value)
             json.dumps(enc)
         except (TypeError, ValueError):
             return  # non-durable value; skip logging
@@ -96,10 +103,15 @@ class RestartLog:
             return False, None
         value = self._log[key]
         # artifact entries only count if the physical data still exists
-        for ref in _refs(value):
+        for ref in physical_refs(value):
             if not ref.exists():
                 return False, None
         return True, value
+
+    def items(self):
+        """(key, decoded value) pairs — `JobStore.import_restart_log`
+        reads these to seed a durable store from a legacy .rlog file."""
+        return self._log.items()
 
     def __len__(self):
         return len(self._log)

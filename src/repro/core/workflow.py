@@ -34,6 +34,7 @@ from repro.core.datastore import inputs_of
 from repro.core.engine import Engine
 from repro.core.futures import (CompletionCounter, DataFuture, resolved,
                                 when_all)
+from repro.core.task import task_key
 from repro.core.xdtm import Dataset, Mapper, typecheck
 
 if TYPE_CHECKING:
@@ -58,7 +59,10 @@ class Procedure:
         self.fn = fn
         self.name = name
         self.duration = duration
-        self.app = app or name
+        # a workflow opened through the service carries a default app (its
+        # tenant id) so every procedure lands in that tenant's ReadyQueue
+        # bucket — the unit fair-share schedules over (DESIGN.md §15)
+        self.app = app or wf.default_app or name
         self.durable = durable
         self.input_types = input_types
         self.vmap_key = vmap_key
@@ -84,9 +88,13 @@ class Procedure:
         inputs = self.inputs
         if inputs is not None and type(inputs) is not tuple:
             inputs = inputs_of(inputs, *args)   # callable spec: map call args
-        return self.wf.engine.submit(
+        wf = self.wf
+        key = wf.stable_key(self.name, args) \
+            if wf.key_prefix is not None else None
+        return wf.engine.submit(
             self.name, self.fn, list(args), duration=dur, app=self.app,
-            durable=self.durable, vmap_key=self.vmap_key, inputs=inputs)
+            durable=self.durable, key=key, vmap_key=self.vmap_key,
+            inputs=inputs)
 
 
 class Workflow:
@@ -111,9 +119,37 @@ class Workflow:
         assert total.get() == [i * i for i in range(10)]
     """
 
-    def __init__(self, name: str, engine: "AnyEngine"):
+    def __init__(self, name: str, engine: "AnyEngine",
+                 key_prefix: str | None = None,
+                 default_app: str | None = None):
         self.name = name
         self.engine = engine
+        # resumable handles (DESIGN.md §15): a non-None `key_prefix`
+        # namespaces every procedure call with a dataflow-stable key
+        # (``prefix + task_key(name, args)``, occurrence-disambiguated),
+        # so re-building the same program against a `JobStore`-backed
+        # resume view restores durably completed tasks instead of
+        # re-running them.  `WorkflowService.open` sets this to
+        # ``"<wf_id>::"``; `default_app` tags submissions for per-tenant
+        # fair share.
+        self.key_prefix = key_prefix
+        self.default_app = default_app
+        self._occurrences: dict[str, int] = {}
+
+    def stable_key(self, name: str, args) -> str:
+        """Dataflow-stable unique key for one procedure call: content
+        fingerprint plus an occurrence counter, so two calls with the
+        same (name, args) get distinct durable rows while a deterministic
+        re-build maps the n-th duplicate to the same key it had before
+        the crash."""
+        base = self.key_prefix + task_key(name, list(args))
+        occ = self._occurrences
+        n = occ.get(base)
+        if n is None:
+            occ[base] = 1
+            return base
+        occ[base] = n + 1
+        return f"{base}~{n}"
 
     # ------------------------------------------------------------------
     def atomic(self, fn: Callable | None = None, *, name: str | None = None,

@@ -1,0 +1,298 @@
+"""Job-store tests (DESIGN.md §15): the status state machine, the journal,
+and sqlite durability.
+
+The property tests (hypothesis, or the deterministic shim from conftest)
+drive the invariants the recovery layer rests on:
+
+  * arbitrary interleavings of record attempts never leave the state
+    machine in a state it did not admit — every accepted transition is in
+    the declared relation, every rejected one raises `IllegalTransition`
+    and leaves the state untouched;
+  * replaying any *prefix* of a journal yields a consistent resumable
+    frontier: done ∪ failed ∪ frontier partitions the keys, and a key is
+    restorable iff its DONE row made the prefix.
+"""
+import json
+import os
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Engine, IllegalTransition, JobStore, RestartLog,
+                        SimClock, TaskStateMachine)
+from repro.core.jobstore import (DISPATCHED, DONE, FAILED, READY, REVOKED,
+                                 STATUS_NAMES, SUBMITTED, TERMINAL, _NEXT)
+from repro.core.xdtm import PhysicalRef
+
+# ---------------------------------------------------------------------------
+# state machine
+# ---------------------------------------------------------------------------
+
+
+def test_happy_path_and_terminal_states():
+    sm = TaskStateMachine()
+    for s in (SUBMITTED, READY, DISPATCHED, DONE):
+        assert sm.advance("k", s)
+    assert sm.state["k"] == DONE
+    for s in (SUBMITTED, READY, DISPATCHED, DONE, FAILED, REVOKED):
+        with pytest.raises(IllegalTransition):
+            sm.advance("k", s)
+
+
+def test_retry_and_revoke_loops():
+    sm = TaskStateMachine()
+    sm.advance("k", SUBMITTED)
+    sm.advance("k", READY)
+    sm.advance("k", DISPATCHED)
+    sm.advance("k", REVOKED)     # drain revocation
+    sm.advance("k", READY)       # re-placed
+    sm.advance("k", DISPATCHED)
+    sm.advance("k", READY)       # retry after failure
+    sm.advance("k", DISPATCHED)
+    sm.advance("k", FAILED)
+    assert sm.state["k"] == FAILED
+
+
+def test_idempotent_self_loops_counted_not_raised():
+    sm = TaskStateMachine()
+    sm.advance("k", SUBMITTED)
+    assert sm.advance("k", SUBMITTED) is False   # duplicate content key
+    sm.advance("k", READY)
+    assert sm.advance("k", READY) is False       # steal re-dispatch
+    assert sm.duplicates == 2
+    with pytest.raises(IllegalTransition):
+        sm.advance("k2", READY)                  # must start at submitted
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from(
+    [(k, s) for k in ("a", "b", "c") for s in range(6)]),
+    min_size=0, max_size=60))
+def test_property_no_interleaving_admits_illegal_transition(ops):
+    """Fuzz record attempts over a few keys: the machine's visible state
+    only ever moves along the declared relation, and a rejected attempt
+    changes nothing."""
+    sm = TaskStateMachine()
+    shadow: dict = {}
+    for key, status in ops:
+        cur = shadow.get(key)
+        legal = status in _NEXT[cur] or (cur == status
+                                         and status in (SUBMITTED, READY))
+        if legal:
+            sm.advance(key, status)
+            if cur != status:
+                shadow[key] = status
+        else:
+            before = dict(sm.state)
+            with pytest.raises(IllegalTransition):
+                sm.advance(key, status)
+            assert sm.state == before
+    assert sm.state == shadow
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=40),
+       st.integers(0, 39))
+def test_property_journal_prefix_replay_is_consistent_frontier(seq, cut):
+    """Build a legal journal for a set of keys by walking random legal
+    steps, then replay an arbitrary prefix into a fresh machine: the
+    replay must accept every row, and done/failed/frontier partition the
+    replayed keys exactly by their last row in the prefix."""
+    import random
+    rng = random.Random(sum(seq) * 31 + cut)
+    journal: list = []
+    live: dict = {}
+    for i, _ in enumerate(seq):
+        key = f"k{i % 7}"
+        cur = live.get(key)
+        nxt = sorted(_NEXT[cur])
+        if not nxt:
+            continue
+        status = nxt[rng.randrange(len(nxt))]
+        journal.append((key, status))
+        live[key] = status
+    prefix = journal[:cut % (len(journal) + 1)]
+    sm = TaskStateMachine()
+    last: dict = {}
+    for key, status in prefix:
+        sm.advance(key, status)      # replay never raises on a real journal
+        last[key] = status
+    done = {k for k, s in last.items() if s == DONE}
+    failed = {k for k, s in last.items() if s == FAILED}
+    frontier = set(sm.frontier())
+    assert done | failed | frontier == set(last)
+    assert not (done & frontier) and not (failed & frontier)
+    assert frontier == {k for k, s in last.items() if s not in TERMINAL}
+
+
+# ---------------------------------------------------------------------------
+# journal + store
+# ---------------------------------------------------------------------------
+
+
+def _drive(journal, key, value=None, fail=None):
+    journal.task_submitted(key)
+    journal.task_ready(key)
+    journal.task_dispatched(key)
+    if fail is not None:
+        journal.task_failed(key, fail)
+    else:
+        journal.task_done(key, value)
+
+
+def test_store_round_trip_and_peek(tmp_path):
+    db = str(tmp_path / "t.db")
+    with JobStore(db, flush_interval=0.01) as store:
+        j = store.journal(default_wf="wf", batch=4)
+        for i in range(9):
+            _drive(j, f"wf::k{i}", value={"i": i})
+        _drive(j, "wf::bad", fail="boom")
+        j.flush()
+        store.sync()
+        state = store.load("wf")
+        assert len(state.done) == 9 and state.done["wf::k3"] == {"i": 3}
+        assert state.failed == {"wf::bad": "boom"}
+        assert state.run_id == 1
+        counts = JobStore.peek(db, "wf")
+        assert counts["done"] == 9 and counts["failed"] == 1
+    # a fresh store over the same file sees the same durable state
+    with JobStore(db) as store2:
+        assert len(store2.load("wf").done) == 9
+        assert store2.begin_run("wf") == 2   # attempts accumulate
+
+
+def test_durability_modes_split_journal_table(tmp_path):
+    """Terminal durability persists into the tasks upsert only (the
+    journal audit table would duplicate it); full durability records
+    every transition there too."""
+    with JobStore(str(tmp_path / "t.db")) as store:
+        jt = store.journal(default_wf="a")
+        _drive(jt, "a::k", value=1)
+        jf = store.journal(default_wf="b", durability="full")
+        _drive(jf, "b::k", value=1)
+        jt.flush(); jf.flush(); store.sync()
+        assert store.journal_rows("a") == []
+        assert [s for _, _, s in store.journal_rows("b")] == \
+            [SUBMITTED, READY, DISPATCHED, DONE]
+        # both modes reach the same durable resume state
+        assert store.load("a").done == {"a::k": 1}
+        assert store.load("b").done == {"b::k": 1}
+
+
+def test_non_json_values_degrade_to_rerun(tmp_path):
+    """A DONE row whose value cannot be encoded is persisted value-less:
+    the task is *not* restorable and re-runs on resume."""
+    with JobStore(str(tmp_path / "t.db")) as store:
+        j = store.journal(default_wf="w")
+        _drive(j, "w::opaque", value=object())
+        _drive(j, "w::plain", value=7)
+        j.flush(); store.sync()
+        state = store.load("w")
+        assert "w::opaque" not in state.done and state.done["w::plain"] == 7
+        assert state.counts["done"] == 2   # durably done, just not resumable
+
+
+def test_physical_refs_round_trip_and_existence_gate(tmp_path):
+    art = tmp_path / "artifact.bin"
+    art.write_bytes(b"x")
+    with JobStore(str(tmp_path / "t.db")) as store:
+        j = store.journal(default_wf="w")
+        _drive(j, "w::a", value=PhysicalRef(str(art)))
+        j.flush(); store.sync()
+        state = store.load("w")
+        assert isinstance(state.done["w::a"], PhysicalRef)
+        os.unlink(art)
+        state2 = store.load("w")
+        assert "w::a" not in state2.done   # artifact gone -> re-run
+
+
+def test_unique_key_occurrence_suffixes():
+    with JobStore(":memory:") as store:
+        j = store.journal()
+        assert j.unique_key("k") == "k"
+        assert j.unique_key("k") == "k~1"
+        assert j.unique_key("k") == "k~2"
+        assert j.unique_key("other") == "other"
+
+
+def test_import_restart_log(tmp_path):
+    rlog = RestartLog(str(tmp_path / "r.rlog"))
+    rlog.append("stage-a", [1, 2])
+    rlog.append("stage-b", {"x": 3})
+    with JobStore(str(tmp_path / "t.db")) as store:
+        assert store.import_restart_log(rlog, wf_id="legacy") == 2
+        state = store.load("legacy")
+        assert state.done == {"legacy::stage-a": [1, 2],
+                              "legacy::stage-b": {"x": 3}}
+
+
+def test_engine_journal_hooks_record_lifecycle(tmp_path):
+    """A journaled engine run records the full state machine for every
+    task — including retries and terminal failures — with no explicit
+    keys passed."""
+    from repro.core import FaultInjector, RetryPolicy
+    clock = SimClock()
+    inj = FaultInjector().fail_first_n("flaky", 1)
+    eng = Engine(clock, fault_injector=inj,
+                 retry_policy=RetryPolicy(max_retries=1, backoff=0.0))
+    eng.local_site(concurrency=2)
+    with JobStore(str(tmp_path / "t.db")) as store:
+        eng.journal = j = store.journal(default_wf="", durability="full")
+        a = eng.submit("ok", None, duration=0.01)
+        b = eng.submit("flaky", None, args=[a], duration=0.01)
+        c = eng.submit("doomed", int, args=["nope"], duration=0.01)
+        eng.run()
+        j.flush(); store.sync()
+        assert a.resolved and b.resolved and c.failed
+        state = store.load("")
+        assert state.counts["done"] == 2 and state.counts["failed"] == 1
+        # the flaky task's journal shows the retry loop
+        rows = [(k, s) for _, k, s in store.journal_rows("")
+                if k.startswith("flaky")]
+        statuses = [s for _, s in rows]
+        assert statuses.count(DISPATCHED) == 2   # first attempt + retry
+        assert statuses[-1] == DONE
+
+
+def test_sigkill_mid_write_leaves_readable_store(tmp_path):
+    """SIGKILL the owning process between commits: the WAL database stays
+    readable and holds exactly the committed prefix."""
+    import signal
+    import subprocess
+    import sys
+    import time as _time
+    db = str(tmp_path / "kill.db")
+    code = (
+        "import sys, time; sys.path.insert(0, %r)\n"
+        "from repro.core import JobStore\n"
+        "store = JobStore(%r, flush_interval=0.005)\n"
+        "j = store.journal(default_wf='w', batch=1)\n"
+        "i = 0\n"
+        "while True:\n"
+        "    k = f'w::k{i}'\n"
+        "    j.task_submitted(k); j.task_ready(k)\n"
+        "    j.task_dispatched(k); j.task_done(k, i)\n"
+        "    j.flush(); i += 1; time.sleep(0.001)\n"
+        % (os.path.join(os.path.dirname(__file__), "..", "src"), db))
+    proc = subprocess.Popen([sys.executable, "-c", code])
+    try:
+        deadline = _time.monotonic() + 30.0
+        while _time.monotonic() < deadline:
+            try:
+                if JobStore.peek(db, "w")["done"] >= 20:
+                    break
+            except Exception:
+                pass
+            _time.sleep(0.02)
+        else:
+            pytest.fail("child made no observable progress")
+    finally:
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+    with JobStore(db) as store:
+        state = store.load("w")
+        assert len(state.done) >= 20
+        # committed prefix is dense: every key below the max is present
+        idx = sorted(int(k.split("k")[-1]) for k in state.done)
+        assert idx == list(range(len(idx)))

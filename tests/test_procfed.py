@@ -8,9 +8,12 @@ per shard), so shard counts and task counts stay small:
   * failure propagation: an upstream exception crossing the pipe fails
     the downstream consumer with the original error;
   * parent-coordinated work stealing moving tasks off a loaded shard;
-  * shard-crash handling: in-flight futures fail with
-    `TaskFailure(kind="host")` and a `shard_death` tracer event instead
-    of hanging the driver;
+  * shard-crash handling: with the default retry budget, in-flight tasks
+    fail over to surviving shards (driver-side re-submission through the
+    retained submit context); with `RetryPolicy(max_retries=0)` they
+    fail fast with `TaskFailure(kind="host")` — either way a
+    `shard_death` tracer event fires and `run()` returns instead of
+    hanging;
   * the socket-framed transport as a drop-in for the pipe transport;
   * sim-vs-real equivalence: a MolDyn-shaped DAG produces identical
     values and identical per-shard placement under `FederatedEngine`
@@ -22,7 +25,8 @@ import pytest
 
 from repro.core import (DRPConfig, FalkonConfig, FalkonProvider,
                         FalkonService, FederatedEngine, ProcessFederation,
-                        ShardSpec, SimClock, TaskFailure, hash_partitioner)
+                        RetryPolicy, ShardSpec, SimClock, TaskFailure,
+                        hash_partitioner)
 from repro.core.procfed import body_scale, body_sleep, body_sum, body_value
 
 SPEC = ShardSpec(executors=2, alloc_latency=1e-4)
@@ -94,11 +98,13 @@ def test_steal_rebalances_all_on_one_shard():
 
 
 def test_shard_crash_fails_inflight_futures():
-    """Killing a shard process mid-run fails its in-flight futures with
-    `TaskFailure(kind="host")` and a `shard_death` tracer event — the
-    driver's `run()` returns instead of hanging."""
+    """With `max_retries=0` (fail-fast), killing a shard process mid-run
+    fails its in-flight futures with `TaskFailure(kind="host")` and a
+    `shard_death` tracer event — the driver's `run()` returns instead of
+    hanging."""
     part = lambda key, n: int(key.split("#")[1]) % n
-    with ProcessFederation(2, SPEC, partitioner=part, steal=False) as fed:
+    with ProcessFederation(2, SPEC, partitioner=part, steal=False,
+                           retry_policy=RetryPolicy(max_retries=0)) as fed:
         fed.wait_ready()
         futs = [fed.submit("t", body_sleep, [0.5], key=f"t#{i}")
                 for i in range(8)]
@@ -116,6 +122,38 @@ def test_shard_crash_fails_inflight_futures():
         assert all(f.resolved for f in live)
         assert fed.tracer.event_counts()["shard_death"]["count"] == 1
         assert fed.metrics()["dead_shards"] == [1]
+        assert fed.tasks_failed_over == 0
+
+
+def test_shard_crash_fails_over_to_survivor():
+    """With the default retry budget, tasks lost to a dead shard are
+    re-submitted to the surviving shard through the retained submit
+    context — every future still resolves, including a dependency chain
+    whose upstream died in flight (the ISSUE-10 fix for PR 9's fail-fast
+    gap)."""
+    part = lambda key, n: 0 if key.startswith("on0") else 1
+    with ProcessFederation(2, SPEC, partitioner=part, steal=False) as fed:
+        fed.wait_ready()
+        # shard 1 holds the sleepers; shard 0 holds a consumer chained on
+        # one of them, so failover must also carry the Ref edge
+        futs = [fed.submit("on1", body_sleep, [0.4], key=f"on1#{i}")
+                for i in range(4)]
+        base = fed.submit("on1v", body_sleep, [0.42], key="on1v#0")
+        chained = fed.submit("on0c", body_scale, [base], key="on0c#0")
+        fed._procs[1].kill()
+        t0 = time.monotonic()
+        fed.run()
+        assert time.monotonic() - t0 < 30.0
+        assert all(f.resolved for f in futs)
+        assert base.resolved and chained.resolved
+        assert chained.get() == 0.84
+        assert fed.tasks_failed_over >= 1
+        assert fed.tasks_failed == 0
+        assert fed.tracer.event_counts()["shard_death"]["count"] == 1
+        assert fed.tracer.event_counts()["task_failover"]["count"] == 1
+        assert fed.stats()["failed_over"] == fed.tasks_failed_over
+        # everything completed on the survivor after the death
+        assert fed.stats()["per_shard_completed"][0] == 6
 
 
 def test_socket_transport_end_to_end():

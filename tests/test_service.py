@@ -1,0 +1,251 @@
+"""Durable workflow service tests (DESIGN.md §15): multi-tenant
+submission, per-app fair share, and resume-from-store.
+
+The fair-share properties target the stride-scheduled `ReadyQueue` drain:
+with `fair_share` on, backlogged apps split placements by their `share=`
+weights (tolerance-band asserted on the completion-order prefix), and the
+starved-app regression documents the exact failure the default
+first-arrival drain exhibits.
+"""
+import pytest
+
+from repro.core import (Engine, FederatedEngine, JobStore, SimClock,
+                        WorkflowService)
+
+# ---------------------------------------------------------------------------
+# fair share
+# ---------------------------------------------------------------------------
+
+
+def _run_apps(fair_share, loads, shares=None, concurrency=4):
+    """Run `loads[app]` equal-cost sim tasks per app through a service;
+    return the completion order as a list of app names."""
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site(concurrency=concurrency)
+    order: list = []
+    with JobStore(":memory:") as store:
+        with WorkflowService(eng, store, fair_share=fair_share) as svc:
+            for app, n in loads.items():
+                share = (shares or {}).get(app, 1.0)
+                h = svc.open(app, app=app, share=share)
+                proc = h.wf.sim_proc("t", duration=1.0)
+                for i in range(n):
+                    proc(i).on_done(lambda f, a=app: order.append(a))
+            svc.run()
+    assert len(order) == sum(loads.values())
+    return order
+
+
+def test_equal_shares_split_throughput_evenly():
+    """Two equally-weighted backlogged apps: each gets half the
+    placements over the first-half completion prefix (±15%)."""
+    order = _run_apps(True, {"a": 100, "b": 100})
+    half = order[: len(order) // 2]
+    frac_a = half.count("a") / len(half)
+    assert 0.35 <= frac_a <= 0.65
+
+
+def test_weighted_shares_follow_ratio():
+    """share=3 vs share=1 → a 3:1 placement ratio while both apps are
+    backlogged (±15% band on the prefix where b is still backlogged)."""
+    order = _run_apps(True, {"a": 150, "b": 150},
+                      shares={"a": 3.0, "b": 1.0})
+    # b stays backlogged at least until 4/3 * 150 = 200 completions
+    prefix = order[:200]
+    frac_a = prefix.count("a") / len(prefix)
+    assert 0.60 <= frac_a <= 0.90
+
+
+def test_three_apps_each_within_band():
+    order = _run_apps(True, {"a": 90, "b": 90, "c": 90}, concurrency=6)
+    prefix = order[:150]
+    for app in ("a", "b", "c"):
+        assert 0.20 <= prefix.count(app) / len(prefix) <= 0.47
+
+
+def test_starved_app_regression():
+    """App `big` queues 400 tasks before `late` queues 50.  The default
+    first-arrival drain hands every freed slot to `big` until its backlog
+    empties — `late` finishes dead last.  Fair share interleaves, so
+    `late` is done within the first ~quarter of completions."""
+    starved = _run_apps(False, {"big": 400, "late": 50})
+    fair = _run_apps(True, {"big": 400, "late": 50})
+    last_starved = max(i for i, a in enumerate(starved) if a == "late")
+    last_fair = max(i for i, a in enumerate(fair) if a == "late")
+    assert last_starved >= 400       # documents the starvation
+    assert last_fair <= 150          # fair share fixes it
+    # same total work either way
+    assert sorted(starved) == sorted(fair)
+
+
+def test_single_app_unaffected_by_fair_share():
+    """With one bucket the fair drain is bypassed entirely — ordering is
+    identical to the default drain."""
+    a = _run_apps(True, {"only": 60})
+    b = _run_apps(False, {"only": 60})
+    assert a == b == ["only"] * 60
+
+
+# ---------------------------------------------------------------------------
+# service lifecycle + resume
+# ---------------------------------------------------------------------------
+
+
+def _square_program(handle, n=20):
+    sq = handle.wf.atomic(fn=lambda x: x * x, name="square")
+    return handle.seal(handle.wf.gather([sq(i) for i in range(n)]))
+
+
+def test_open_seal_run_result(tmp_path):
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site(concurrency=4)
+    with JobStore(str(tmp_path / "s.db")) as store:
+        with WorkflowService(eng, store) as svc:
+            h = svc.open("etl")
+            _square_program(h)
+            svc.run()
+            assert h.result() == [i * i for i in range(20)]
+            assert h.restored == 0
+            st = svc.status("etl")
+            # gather resolves driver-side — only the n squares journal
+            assert st["done"] == 20 and st["failed"] == 0
+            assert h.counts()["done"] == 20
+        # seal() flipped the durable workflow status on completion
+        assert store.load("etl").counts["done"] == 20
+
+
+def test_resume_restores_done_tasks(tmp_path):
+    db = str(tmp_path / "s.db")
+
+    def run_once():
+        clock = SimClock()
+        eng = Engine(clock)
+        eng.local_site(concurrency=4)
+        with JobStore(db) as store, WorkflowService(eng, store) as svc:
+            h = svc.open("etl")
+            out = _square_program(h)
+            svc.run()
+            return out.get(), h.restored, h.run_id
+
+    first, restored1, run1 = run_once()
+    second, restored2, run2 = run_once()
+    assert first == second                       # byte-identical results
+    assert restored1 == 0 and run1 == 1
+    assert restored2 == 20 and run2 == 2         # nothing re-ran
+
+
+def test_resume_false_reruns_everything(tmp_path):
+    db = str(tmp_path / "s.db")
+    for expect_restored, resume in ((0, True), (0, False)):
+        clock = SimClock()
+        eng = Engine(clock)
+        eng.local_site(concurrency=4)
+        with JobStore(db) as store, WorkflowService(eng, store) as svc:
+            h = svc.open("etl", resume=resume)
+            _square_program(h)
+            svc.run()
+            assert h.restored == expect_restored
+
+
+def test_duplicate_calls_get_distinct_durable_rows(tmp_path):
+    """Two calls with identical (name, args) are distinct tasks: the
+    occurrence suffix keeps their rows apart, and a deterministic
+    re-build restores *both*."""
+    db = str(tmp_path / "s.db")
+
+    def run_once():
+        clock = SimClock()
+        eng = Engine(clock)
+        eng.local_site(concurrency=2)
+        with JobStore(db) as store, WorkflowService(eng, store) as svc:
+            h = svc.open("dup")
+            noisy = h.wf.atomic(fn=lambda x: x + 1, name="noisy")
+            out = h.seal(h.wf.gather([noisy(7), noisy(7), noisy(7)]))
+            svc.run()
+            return out.get(), h.restored
+
+    vals1, restored1 = run_once()
+    vals2, restored2 = run_once()
+    assert vals1 == vals2 == [8, 8, 8]
+    assert restored1 == 0 and restored2 == 3     # all three occurrences
+
+
+def test_failed_workflow_marks_status_failed(tmp_path):
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site(concurrency=2)
+    with JobStore(str(tmp_path / "s.db")) as store:
+        with WorkflowService(eng, store) as svc:
+            h = svc.open("bad")
+            boom = h.wf.atomic(fn=int, name="boom")
+            h.seal(boom("not-an-int"))
+            svc.run()
+            assert h._out.failed
+            st = svc.status("bad")
+            assert st["failed"] == 1
+        assert store.load("bad").failed
+
+
+def test_service_refuses_occupied_seams(tmp_path):
+    from repro.core import RestartLog
+    clock = SimClock()
+    eng = Engine(clock, restart_log=RestartLog(str(tmp_path / "r.rlog")))
+    with JobStore(":memory:") as store:
+        with pytest.raises(ValueError):
+            WorkflowService(eng, store)
+
+
+def test_open_rejects_bad_and_duplicate_ids():
+    eng = Engine(SimClock())
+    eng.local_site()
+    with JobStore(":memory:") as store:
+        with WorkflowService(eng, store) as svc:
+            svc.open("w")
+            with pytest.raises(ValueError):
+                svc.open("w")
+            with pytest.raises(ValueError):
+                svc.open("x", wf_id="a::b")
+
+
+def test_two_tenants_share_one_engine(tmp_path):
+    """Two workflows opened on the same service run interleaved and each
+    lands under its own wf_id in the store."""
+    clock = SimClock()
+    eng = Engine(clock)
+    eng.local_site(concurrency=4)
+    with JobStore(str(tmp_path / "s.db")) as store:
+        with WorkflowService(eng, store) as svc:
+            ha = svc.open("alice")
+            hb = svc.open("bob")
+            _square_program(ha, n=30)
+            _square_program(hb, n=10)
+            svc.run()
+            assert ha.result() == [i * i for i in range(30)]
+            assert hb.result() == [i * i for i in range(10)]
+        assert store.load("alice").counts["done"] == 30
+        assert store.load("bob").counts["done"] == 10
+
+
+def test_federated_engine_service_smoke(tmp_path):
+    """The service over a 2-shard `FederatedEngine`: one journal and one
+    resume view shared by every shard; resume works across the shard
+    boundary."""
+    db = str(tmp_path / "fed.db")
+
+    def run_once():
+        clock = SimClock()
+        fed = FederatedEngine(2, clock=clock, steal=False)
+        for eng in fed.shards:
+            eng.local_site(concurrency=2)
+        with JobStore(db) as store, WorkflowService(fed, store) as svc:
+            h = svc.open("fedwf")
+            _square_program(h, n=16)
+            svc.run()
+            return h.result(), h.restored
+
+    vals1, restored1 = run_once()
+    vals2, restored2 = run_once()
+    assert vals1 == vals2 == [i * i for i in range(16)]
+    assert restored1 == 0 and restored2 == 16
